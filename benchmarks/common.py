@@ -1,0 +1,84 @@
+"""Shared benchmark infrastructure: datasets, timing, CSV output.
+
+Runtime metric: the first superstep includes jit compilation, so the
+reported `runtime` replaces step 0's wall time with the median step time
+(raw wall time is also reported). Message bytes are exact (counted by the
+channels, remote-only, like the paper's tables).
+"""
+from __future__ import annotations
+
+import functools
+import statistics
+import sys
+
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph import pgraph
+
+W = 8  # logical workers, as in the paper's 8-node cluster
+
+
+@functools.lru_cache(maxsize=None)
+def dataset(name: str, scale: int):
+    """Paper-table dataset stand-ins, CPU-sized by `scale`."""
+    if name == "web":          # directed power-law (Wikipedia/WebUK)
+        return gen.rmat(scale, edge_factor=12, seed=1, directed=True)
+    if name == "social":       # undirected power-law (Facebook/Twitter)
+        return gen.rmat(scale, edge_factor=8, seed=2).symmetrized()
+    if name == "social_dense":  # denser (Twitter-like, avg deg ~48)
+        return gen.rmat(scale, edge_factor=24, seed=3).symmetrized()
+    if name == "road":          # large-diameter grid (USA-road-like)
+        side = int(2 ** (scale / 2))
+        return gen.grid2d(side)
+    if name == "weighted":      # weighted power-law (RMAT24-like)
+        return gen.rmat(scale, edge_factor=8, seed=4,
+                        weighted=True).symmetrized()
+    raise ValueError(name)
+
+
+@functools.lru_cache(maxsize=None)
+def partitioned(name: str, scale: int, partitioner: str, build: tuple):
+    return pgraph.partition_graph(dataset(name, scale), W, partitioner,
+                                  build=build)
+
+
+def adjusted_runtime(res) -> float:
+    """Wall time with step-0 compile overhead replaced by the median."""
+    ts = res.step_times_s
+    if len(ts) <= 1:
+        return res.wall_time_s
+    med = statistics.median(ts[1:])
+    return sum(ts[1:]) + med
+
+
+ROWS = []
+
+
+def emit(table: str, program: str, ds: str, res, extra=None):
+    runtime = adjusted_runtime(res)
+    row = {
+        "table": table,
+        "program": program,
+        "dataset": ds,
+        "runtime_s": round(runtime, 4),
+        "wall_s": round(res.wall_time_s, 4),
+        "message_MB": round(res.total_bytes / 1e6, 4),
+        "messages": res.total_msgs,
+        "supersteps": res.steps,
+    }
+    if extra:
+        row.update(extra)
+    ROWS.append(row)
+    print(f"  {program:28s} {ds:14s} runtime {runtime:8.3f}s "
+          f"msgs {res.total_bytes/1e6:9.3f} MB  steps {res.steps}")
+    return row
+
+
+def print_csv(file=None):
+    f = file or sys.stdout
+    cols = ["table", "program", "dataset", "runtime_s", "message_MB",
+            "messages", "supersteps"]
+    print(",".join(cols), file=f)
+    for r in ROWS:
+        print(",".join(str(r.get(c, "")) for c in cols), file=f)

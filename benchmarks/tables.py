@@ -1,0 +1,140 @@
+"""One benchmark per paper table (IV, V-top/mid/bottom, VI, VII)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.algorithms import (msf, pagerank, pointer_jumping, scc, sssp, sv,
+                              wcc)
+from repro.graph import generators as gen, pgraph
+
+
+def table4_basic_channels(scale: int):
+    """Table IV: Pregel-monolithic vs channel-typed basic implementations.
+
+    PR/WCC/PJ use a single message type, so Pregel's global combiner
+    applies and bytes match (as in the paper); the heterogeneous-message
+    algorithms (S-V, MSF) show the combiner-inapplicability / padded-type
+    costs that channels remove.
+    """
+    print("\n== Table IV: basic channels vs monolithic Pregel ==")
+    pg_web = common.partitioned("web", scale, "random",
+                                ("scatter_out", "raw_out"))
+    for name, variant in [("pregel (mono)", "basic"),
+                          ("channel (basic)", "basic")]:
+        _, res = pagerank.run(pg_web, iters=10, variant=variant)
+        common.emit("IV", f"PR {name}", "web", res)
+
+    pg_soc = common.partitioned("social", scale, "random",
+                                ("scatter_out", "prop_out", "raw_out"))
+    for name, variant in [("pregel (mono)", "basic"),
+                          ("channel (basic)", "basic")]:
+        _, res = wcc.run(pg_soc, variant=variant)
+        common.emit("IV", f"WCC {name}", "social", res)
+
+    n = 1 << scale
+    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
+    pg_pj = pgraph.partition_graph(empty, common.W, "random", build=())
+    par = gen.parent_chain(n, seed=3)
+    for name, variant in [("pregel (mono)", "basic"),
+                          ("channel (basic)", "basic")]:
+        _, res = pointer_jumping.run(pg_pj, par, variant=variant)
+        common.emit("IV", f"PJ {name}", "chain", res)
+
+    for name, variant in [("pregel (mono)", "monolithic"),
+                          ("channel (basic)", "basic")]:
+        _, res = sv.run(pg_soc, variant=variant)
+        common.emit("IV", f"S-V {name}", "social", res)
+
+    pg_w = common.partitioned("weighted", scale - 1, "random", ("raw_out",))
+    for name, variant in [("pregel (mono)", "monolithic"),
+                          ("channel (typed)", "channels")]:
+        out, res = msf.run(pg_w, variant=variant)
+        common.emit("IV", f"MSF {name}", "weighted", res)
+
+
+def table5_scatter_combine(scale: int):
+    """Table V top: PageRank, CombinedMessage vs ScatterCombine channel."""
+    print("\n== Table V (top): scatter-combine channel on PageRank ==")
+    for ds in ("web", "social_dense"):
+        pg = common.partitioned(ds, scale, "random",
+                                ("scatter_out", "raw_out"))
+        for name, variant in [("channel (basic)", "basic"),
+                              ("channel (scatter)", "scatter")]:
+            _, res = pagerank.run(pg, iters=10, variant=variant)
+            common.emit("V-top", f"PR {name}", ds, res)
+
+
+def table5_request_respond(scale: int):
+    """Table V middle: Pointer-Jumping, DirectMessage vs RequestRespond."""
+    print("\n== Table V (mid): request-respond channel on PJ ==")
+    n = 1 << scale
+    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
+    pg = pgraph.partition_graph(empty, common.W, "random", build=())
+    for ds, par in [("tree", gen.random_tree_parents(n, seed=5)),
+                    ("chain", gen.parent_chain(n, seed=5))]:
+        for name, variant in [("channel (basic)", "basic"),
+                              ("channel (reqresp)", "reqresp")]:
+            _, res = pointer_jumping.run(pg, par, variant=variant)
+            common.emit("V-mid", f"PJ {name}", ds, res)
+
+
+def table5_propagation(scale: int):
+    """Table V bottom: WCC, CombinedMessage vs Propagation channel, on the
+    unpartitioned (random) and partitioned (bfs/METIS-like) graph."""
+    print("\n== Table V (bottom): propagation channel on WCC ==")
+    for ds, part, tag in [("road", "random", "road"),
+                          ("road", "bfs", "road (P)"),
+                          ("social", "random", "social"),
+                          ("social", "bfs", "social (P)")]:
+        pg = common.partitioned(ds, scale, part, ("prop_out", "raw_out"))
+        for name, variant in [("channel (basic)", "basic"),
+                              ("channel (prop)", "prop")]:
+            _, res = wcc.run(pg, variant=variant)
+            extra = {}
+            if variant == "prop":
+                info = np.asarray(res.state["info"])
+                extra = {"global_rounds": int(info[:, 0].max()),
+                         "inner_iters": int(info[:, 1].max())}
+            common.emit("V-bot", f"WCC {name}", tag, res, extra)
+
+
+def table6_sv_composition(scale: int):
+    """Table VI: S-V with every combination of the two optimized channels."""
+    print("\n== Table VI: S-V channel composition ==")
+    for ds in ("social", "social_dense"):
+        pg = common.partitioned(ds, scale, "random",
+                                ("scatter_out", "prop_out", "raw_out"))
+        for name, variant in [("2-channel (basic)", "basic"),
+                              ("3-channel (reqresp)", "reqresp"),
+                              ("4-channel (scatter)", "scatter"),
+                              ("5-channel (both)", "both")]:
+            _, res = sv.run(pg, variant=variant)
+            common.emit("VI", f"S-V {name}", ds, res)
+
+
+def table7_minlabel_scc(scale: int):
+    """Table VII: Min-Label SCC with/without the propagation channel."""
+    print("\n== Table VII: Min-Label SCC + propagation channel ==")
+    for part, tag in [("random", "web"), ("bfs", "web (P)")]:
+        pg = common.partitioned(
+            "web", scale, part,
+            ("scatter_out", "scatter_in", "prop_out", "prop_in",
+             "raw_out", "raw_in"))
+        for name, variant in [("channel (basic)", "basic"),
+                              ("channel (prop)", "prop")]:
+            _, res = scc.run(pg, variant=variant)
+            common.emit("VII", f"SCC {name}", tag, res)
+
+
+def bonus_sssp(scale: int):
+    """SSSP with the propagation channel (weighted generalization)."""
+    print("\n== Bonus: weighted SSSP via propagation channel ==")
+    g = gen.rmat(scale, edge_factor=8, seed=6, weighted=True)
+    for part, tag in [("random", "weighted"), ("bfs", "weighted (P)")]:
+        pg = pgraph.partition_graph(g, common.W, part,
+                                    build=("prop_out", "raw_out"))
+        for name, variant in [("channel (basic)", "basic"),
+                              ("channel (prop)", "prop")]:
+            _, res = sssp.run(pg, 0, variant=variant)
+            common.emit("SSSP", f"SSSP {name}", tag, res)

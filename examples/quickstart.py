@@ -1,0 +1,55 @@
+"""Quickstart: the channel interface in 60 lines.
+
+Implements PageRank two ways — the standard CombinedMessage channel and
+the optimized ScatterCombine channel — exactly the one-line optimization
+switch the paper demonstrates (§III-B), and prints the traffic difference.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax.numpy as jnp
+
+from repro.core import aggregator as agg
+from repro.core import message as msg
+from repro.core import scatter_combine as sc
+from repro.graph import generators as gen, pgraph
+from repro.pregel import runtime
+
+
+def pagerank_step(variant):
+    def step(ctx, g, state, step_idx):
+        pr = state["pr"]
+        deg = jnp.maximum(g.deg_out, 1).astype(jnp.float32)
+        contrib = jnp.where(g.deg_out > 0, pr / deg, 0.0)
+
+        if variant == "scatter":                # the optimized channel
+            incoming = sc.broadcast_combine(ctx, g.scatter_out, contrib, "sum")
+        else:                                   # the standard channel
+            raw = g.raw_out
+            incoming, _, _ = msg.combined_send(
+                ctx, raw.dst_global, raw.mask, contrib[raw.src_local],
+                "sum", capacity=ctx.n_loc)
+
+        sink = agg.aggregate(                    # the aggregator channel
+            ctx, jnp.where((g.deg_out == 0) & g.v_mask, pr, 0.0), "sum")
+        n = jnp.float32(graph.n)
+        new_pr = jnp.where(g.v_mask,
+                           0.15 / n + 0.85 * (incoming + sink / n), 0.0)
+        return {"pr": new_pr}, step_idx >= 19
+    return step
+
+
+if __name__ == "__main__":
+    graph = gen.rmat(12, edge_factor=8, seed=1)           # 4096 vertices
+    pg = pgraph.partition_graph(graph, n_workers=8, partitioner="random",
+                                build=("scatter_out", "raw_out"))
+    state0 = {"pr": jnp.where(pg.v_mask, 1.0 / graph.n, 0.0)}
+
+    for variant in ("basic", "scatter"):
+        res = runtime.run_supersteps(pg, pagerank_step(variant), state0,
+                                     max_steps=20)
+        pr = pg.to_global(res.state["pr"])
+        print(f"PageRank [{variant:7s}] sum={pr.sum():.6f} "
+              f"supersteps={res.steps} "
+              f"traffic={res.total_bytes/1e6:.3f} MB "
+              f"({res.total_msgs} messages)")
+    print("\nSwitching one channel changed the traffic, not the algorithm.")

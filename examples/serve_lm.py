@@ -1,0 +1,51 @@
+"""Serving example: batched prefill + token-by-token decode with KV cache
+(greedy and sampled), on a reduced mixtral-family config — exercising SWA
+ring caches and MoE routing in the decode path.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import registry
+from repro.models import params as Pm
+from repro.serve import decode as serve
+
+
+def main():
+    cfg = registry.ARCHS["mixtral-8x7b"].smoke
+    print(f"serving {cfg.name}: {cfg.n_layers}L d={cfg.d_model} "
+          f"{cfg.moe_experts} experts top-{cfg.moe_top_k} "
+          f"window={cfg.attn_window}")
+    params = Pm.init_params(cfg, jax.random.PRNGKey(0))
+
+    batch, prompt_len, max_new = 4, 12, 16
+    prompts = jax.random.randint(
+        jax.random.PRNGKey(1), (batch, prompt_len), 0, cfg.vocab)
+
+    t0 = time.perf_counter()
+    out = serve.generate(cfg, params, prompts, max_new=max_new)
+    t1 = time.perf_counter()
+    print(f"greedy: {batch} requests x {max_new} new tokens "
+          f"in {t1-t0:.2f}s ({batch*max_new/(t1-t0):.1f} tok/s)")
+    print("  completions:", np.asarray(out)[:, :8].tolist())
+
+    out_s = serve.generate(cfg, params, prompts, max_new=max_new,
+                           temperature=0.8, seed=3)
+    print("  sampled:    ", np.asarray(out_s)[:, :8].tolist())
+
+    # throughput sweep over batch sizes (continuous-batching capacity probe)
+    for b in (1, 8, 32):
+        p = jax.random.randint(jax.random.PRNGKey(2), (b, prompt_len),
+                               0, cfg.vocab)
+        t0 = time.perf_counter()
+        serve.generate(cfg, params, p, max_new=8)
+        dt = time.perf_counter() - t0
+        print(f"  batch {b:3d}: {b*8/dt:8.1f} tok/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""PageRank (paper Fig. 1 / Table V top).
+
+Variants:
+  - "basic":   CombinedMessage channel (per-superstep sort-based routing,
+               ids on the wire) — the standard-channel Fig. 1 program.
+  - "scatter": ScatterCombine channel (static plan, no ids) — the paper's
+               one-line optimization switch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import aggregator as agg
+from repro.core import message as msg
+from repro.core import scatter_combine as sc
+from repro.graph.pgraph import PartitionedGraph
+from repro.pregel import runtime
+
+
+def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
+        damping: float = 0.85, backend: str = "vmap", mesh=None,
+        use_kernel: bool = False):
+    n = jnp.float32(pg.n)
+
+    def step(ctx, gs, state, step_idx):
+        pr = state["pr"]
+        deg = jnp.maximum(gs.deg_out, 1).astype(jnp.float32)
+        contrib = jnp.where(gs.deg_out > 0, pr / deg, 0.0)
+        overflow = jnp.asarray(False)
+        if variant == "scatter":
+            incoming = sc.broadcast_combine(
+                ctx, gs.scatter_out, contrib, "sum", use_kernel=use_kernel
+            )
+        elif variant == "basic":
+            raw = gs.raw_out
+            incoming, _, overflow = msg.combined_send(
+                ctx,
+                raw.dst_global,
+                raw.mask,
+                contrib[raw.src_local],
+                "sum",
+                capacity=ctx.n_loc,
+            )
+        else:
+            raise ValueError(variant)
+        sink = agg.aggregate(
+            ctx, jnp.where((gs.deg_out == 0) & gs.v_mask, pr, 0.0), "sum"
+        )
+        new_pr = jnp.where(
+            gs.v_mask, (1 - damping) / n + damping * (incoming + sink / n), 0.0
+        )
+        return {"pr": new_pr}, step_idx >= iters - 1, overflow
+
+    state0 = {"pr": jnp.where(pg.v_mask, 1.0 / n, 0.0)}
+    res = runtime.run_supersteps(pg, step, state0, max_steps=iters,
+                                 backend=backend, mesh=mesh)
+    return pg.to_global(res.state["pr"]), res

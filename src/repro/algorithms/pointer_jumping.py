@@ -1,0 +1,50 @@
+"""Pointer-Jumping (paper Table V middle): every vertex of a rooted forest
+finds its root by repeated D[u] <- D[D[u]].
+
+Variants:
+  - "basic":   two DirectMessage rounds per superstep (ids both ways,
+               no dedup) — Pregel's way.
+  - "reqresp": the RequestRespond channel (dedup + positional replies).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.algorithms import common
+from repro.core import request_respond as rr
+from repro.graph.pgraph import PartitionedGraph
+from repro.pregel import runtime
+
+
+def parents_to_local(pg: PartitionedGraph, parents_old: np.ndarray):
+    """(n,) old-id parent array -> (W, n_loc) int32 in new-id space."""
+    new = pg.new_of_old.arr
+    flat = np.arange(pg.n_pad, dtype=np.int64)  # padding points to itself
+    flat[new] = new[parents_old]
+    return jnp.asarray(flat.reshape(pg.num_workers, pg.n_loc).astype(np.int32))
+
+
+def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
+        max_steps: int = 64, backend: str = "vmap", mesh=None):
+    p0 = parents_to_local(pg, parents_old)
+
+    def step(ctx, gs, state, step_idx):
+        p = state["P"]
+        if variant == "reqresp":
+            grand, overflow = rr.request(
+                ctx, p.reshape(-1), gs.v_mask.reshape(-1), p, capacity=ctx.n_loc
+            )
+        elif variant == "basic":
+            grand, overflow = common.direct_request_respond(
+                ctx, p.reshape(-1), gs.v_mask.reshape(-1), p
+            )
+        else:
+            raise ValueError(variant)
+        newp = jnp.where(gs.v_mask, grand.reshape(p.shape), p)
+        return {"P": newp}, jnp.all(newp == p), overflow
+
+    res = runtime.run_supersteps(pg, step, {"P": p0}, max_steps=max_steps,
+                                 backend=backend, mesh=mesh)
+    roots_new = pg.to_global(res.state["P"])
+    return roots_new, res

@@ -1,0 +1,64 @@
+"""Single-source shortest paths (weighted Bellman-Ford flavor).
+
+Variants:
+  - "basic": per-superstep CombinedMessage from active (improved) vertices.
+  - "prop":  Propagation channel with edge_transform = dist + w — the
+             channel generalizes beyond min-label propagation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import message as msg
+from repro.core import propagation as prop
+from repro.graph.pgraph import PartitionedGraph
+from repro.pregel import runtime
+
+INF = jnp.float32(np.inf)
+
+
+def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
+        max_steps: int = 10_000, backend: str = "vmap", mesh=None):
+    src_new = int(pg.new_of_old.arr[source_old])
+    ids = pg.global_ids()
+    dist0 = jnp.where(ids == src_new, 0.0, INF).astype(jnp.float32)
+
+    add_w = lambda v, w: v + (w[:, None] if v.ndim == 2 else w)
+
+    if variant == "prop":
+
+        def step(ctx, gs, state, step_idx):
+            dist, rounds, iters = prop.propagate(
+                ctx, gs.prop_out, state["dist"], "min", edge_transform=add_w
+            )
+            info = jnp.stack([rounds, iters]).astype(jnp.int32)
+            return {"dist": dist, "info": info}, True
+
+        state0 = {"dist": dist0, "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
+        res = runtime.run_supersteps(pg, step, state0, max_steps=1,
+                                     backend=backend, mesh=mesh)
+    elif variant == "basic":
+
+        def step(ctx, gs, state, step_idx):
+            dist, active = state["dist"], state["active"]
+            raw = gs.raw_out
+            send_val = dist[raw.src_local] + raw.w
+            valid = raw.mask & active[raw.src_local]
+            inc, got, overflow = msg.combined_send(
+                ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
+            )
+            new = jnp.where(gs.v_mask, jnp.minimum(dist, inc), dist)
+            new_active = new < dist
+            return (
+                {"dist": new, "active": new_active},
+                ~jnp.any(new_active),
+                overflow,
+            )
+
+        state0 = {"dist": dist0, "active": ids == src_new}
+        res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
+                                     backend=backend, mesh=mesh)
+    else:
+        raise ValueError(variant)
+    return pg.to_global(res.state["dist"]), res

@@ -1,0 +1,117 @@
+"""Shiloach-Vishkin connected components (paper §III-C, Table VI).
+
+The showcase for channel *composition*. Three communication patterns, each
+with a baseline and an optimized channel:
+
+  1. root test + pointer jumping  (D[D[u]]):   DirectMessage 2-phase  vs
+     RequestRespond channel                     [load balance]
+  2. neighbor minimum  (min D[e] over Nbr[u]):  CombinedMessage per edge vs
+     ScatterCombine channel                     [neighborhood traffic]
+  3. remote min-update (D[D[u]] <?= t):         CombinedMessage (min)
+     in all variants                            [congestion]
+
+variants: "basic" | "reqresp" | "scatter" | "both" — exactly the paper's
+programs 2-5 in Table VI. The graph must be symmetrized.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.algorithms import common
+from repro.core import message as msg
+from repro.core import request_respond as rr
+from repro.core import scatter_combine as sc
+from repro.graph.pgraph import PartitionedGraph
+from repro.pregel import runtime
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
+        backend: str = "vmap", mesh=None, use_kernel: bool = False):
+    use_rr = variant in ("reqresp", "both")
+    use_sc = variant in ("scatter", "both")
+    monolithic = variant == "monolithic"
+    if variant not in ("basic", "reqresp", "scatter", "both", "monolithic"):
+        raise ValueError(variant)
+
+    def ask(ctx, gs, dst_per_vertex, vals):
+        """D[dst] for every local vertex, via the selected channel."""
+        if use_rr:
+            resp, ovf = rr.request(
+                ctx, dst_per_vertex, gs.v_mask, vals, capacity=ctx.n_loc
+            )
+        else:
+            resp, ovf = common.direct_request_respond(
+                ctx, dst_per_vertex, gs.v_mask, vals
+            )
+        return resp, ovf
+
+    def neighbor_min(ctx, gs, vals):
+        """min over neighbors' vals, via the selected channel."""
+        if use_sc:
+            t = sc.broadcast_combine(ctx, gs.scatter_out, vals, "min",
+                                     use_kernel=use_kernel)
+            return t, jnp.asarray(False)
+        raw = gs.raw_out
+        if monolithic:
+            # Pregel with an inapplicable global combiner: one message per
+            # edge, combined only at the receiver (paper §V-A analysis).
+            deliv = msg.direct_send(
+                ctx, raw.dst_global, raw.mask,
+                {"v": vals[raw.src_local]}, capacity=raw.e_cap,
+                name="mono_message",
+            )
+            from repro.kernels import ops as kops
+            inc = kops.segment_combine(
+                jnp.where(deliv.mask, deliv.payload["v"], INF32),
+                deliv.dst_local, ctx.n_loc, "min")
+            return inc, deliv.overflow
+        inc, got, ovf = msg.combined_send(
+            ctx, raw.dst_global, raw.mask, vals[raw.src_local], "min",
+            capacity=ctx.n_loc,
+        )
+        return jnp.where(got, inc, INF32), ovf
+
+    def step(ctx, gs, state, step_idx):
+        d = state["D"]
+        gid = ctx.me() * ctx.n_loc + jnp.arange(ctx.n_loc, dtype=jnp.int32)
+
+        # 1. is my parent a root?  (grand == D[u])
+        grand, ovf1 = ask(ctx, gs, d, d)
+        parent_is_root = grand == d
+
+        # 2. minimum neighbor pointer t
+        t, ovf2 = neighbor_min(ctx, gs, d)
+
+        # 3. tree merging: send t to the root D[u] with a min-combiner
+        cond = gs.v_mask & parent_is_root & (t < d)
+        if monolithic:
+            deliv = msg.direct_send(ctx, d, cond, {"t": t},
+                                    capacity=ctx.n_loc, name="mono_message")
+            from repro.kernels import ops as kops
+            minval = kops.segment_combine(
+                jnp.where(deliv.mask, deliv.payload["t"], INF32),
+                deliv.dst_local, ctx.n_loc, "min")
+            got = minval != INF32
+            ovf3 = deliv.overflow
+        else:
+            minval, got, ovf3 = msg.combined_send(
+                ctx, d, cond, t, "min", capacity=ctx.n_loc,
+                name="merge_message"
+            )
+        d1 = jnp.where(got & gs.v_mask, jnp.minimum(d, minval), d)
+
+        # 4. pointer jumping: D[u] <- D[D[u]] (one hop, reads merged values)
+        grand2, ovf4 = ask(ctx, gs, d1, d1)
+        d2 = jnp.where(gs.v_mask, grand2, d1)
+
+        halt = jnp.all(d2 == d)
+        overflow = ovf1 | ovf2 | ovf3 | ovf4
+        return {"D": d2}, halt, overflow
+
+    ids = pg.global_ids().astype(jnp.int32)
+    state0 = {"D": jnp.where(pg.v_mask, ids, ids)}  # D[u] = u (pads too)
+    res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
+                                 backend=backend, mesh=mesh)
+    return pg.to_global(res.state["D"]), res

@@ -1,0 +1,14 @@
+"""repro.core — the paper's contribution: composable communication channels.
+
+Import order matters: combiners first (the kernels depend on it), then the
+channel modules (which depend on the kernels).
+"""
+from repro.core import combiners  # noqa: F401  (must be first)
+from repro.core.channel import ChannelContext, payload_width  # noqa: F401
+from repro.core import routing  # noqa: F401
+from repro.core import aggregator  # noqa: F401
+from repro.core import message  # noqa: F401
+from repro.core import scatter_combine  # noqa: F401
+from repro.core import request_respond  # noqa: F401
+from repro.core import propagation  # noqa: F401
+from repro.core import segmented  # noqa: F401

@@ -1,0 +1,55 @@
+"""Channel base machinery: per-step context and message accounting.
+
+The paper's ``Channel`` base class exposes serialize()/deserialize() hooks
+around raw per-peer byte buffers. In the SPMD adaptation a channel is a
+pure function over per-shard arrays that internally performs axis-name
+collectives; the ``ChannelContext`` carries the axis name and accumulates
+the per-channel traffic statistics (logical bytes / message counts that
+cross worker boundaries — the quantity the paper's tables report).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class ChannelContext:
+    axis: str
+    num_workers: int
+    n_loc: int
+    stats_bytes: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    stats_msgs: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def me(self):
+        return jax.lax.axis_index(self.axis)
+
+    def add_traffic(self, name: str, nbytes, nmsgs):
+        z = jnp.asarray(0, jnp.int64) if False else jnp.asarray(0, jnp.int32)
+        self.stats_bytes[name] = self.stats_bytes.get(name, z) + jnp.asarray(
+            nbytes, jnp.int32
+        )
+        self.stats_msgs[name] = self.stats_msgs.get(name, z) + jnp.asarray(
+            nmsgs, jnp.int32
+        )
+
+    def stats(self) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
+        return dict(self.stats_bytes), dict(self.stats_msgs)
+
+
+def itemsize_of(x) -> int:
+    return jnp.dtype(x.dtype).itemsize
+
+
+def payload_width(payload) -> int:
+    """Total bytes per message for a pytree payload (per leading element)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(payload):
+        per = 1
+        for d in leaf.shape[1:]:
+            per *= d
+        total += per * jnp.dtype(leaf.dtype).itemsize
+    return total

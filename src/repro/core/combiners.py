@@ -1,0 +1,130 @@
+"""Combiners — associative/commutative reduction operators for channels.
+
+The paper attaches a combiner to each channel independently (unlike Pregel's
+single global combiner); every optimized channel in this library is
+parameterized by one of these.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class Combiner:
+    """An associative, commutative binary reduction with identity.
+
+    Attributes:
+      name: short tag ("sum" | "min" | "max" | "or" | "prod").
+      fn: jnp-compatible binary op.
+      identity: identity element (python scalar; cast to the value dtype).
+    """
+
+    name: str
+    fn: Callable
+    identity: float
+
+    def __call__(self, a, b):
+        return self.fn(a, b)
+
+    def identity_like(self, x):
+        if self.name == "min_by_first":
+            # lexicographic-min over trailing dim: key = [..., 0]
+            out = jnp.zeros_like(x)
+            key_ident = (
+                jnp.iinfo(x.dtype).max
+                if jnp.issubdtype(x.dtype, jnp.integer)
+                else jnp.inf
+            )
+            return out.at[..., 0].set(key_ident)
+        return jnp.full_like(x, self.ident_for(x.dtype))
+
+    def ident_for(self, dtype):
+        dtype = jnp.dtype(dtype)
+        if self.name in ("min", "min_by_first"):
+            if jnp.issubdtype(dtype, jnp.integer):
+                return jnp.iinfo(dtype).max
+            return jnp.inf
+        if self.name == "max":
+            if jnp.issubdtype(dtype, jnp.integer):
+                return jnp.iinfo(dtype).min
+            return -jnp.inf
+        return self.identity
+
+    def segment_reduce(self, vals, seg_ids, num_segments):
+        """Reference segment reduction (sorted or unsorted seg_ids)."""
+        if self.name == "min_by_first":
+            from repro.core import segmented
+
+            order = jnp.argsort(seg_ids)
+            return segmented.segmented_reduce_sorted(
+                vals[order],
+                jnp.asarray(seg_ids, jnp.int32)[order],
+                num_segments,
+                self.fn,
+                self.identity_like,
+            )
+        if self.name == "sum":
+            out = jax.ops.segment_sum(vals, seg_ids, num_segments)
+        elif self.name == "min":
+            out = jax.ops.segment_min(vals, seg_ids, num_segments)
+        elif self.name == "max":
+            out = jax.ops.segment_max(vals, seg_ids, num_segments)
+        elif self.name == "prod":
+            out = jax.ops.segment_prod(vals, seg_ids, num_segments)
+        elif self.name == "or":
+            out = jax.ops.segment_max(vals.astype(jnp.int32), seg_ids, num_segments)
+            out = out.astype(vals.dtype)
+        else:
+            raise ValueError(f"unknown combiner {self.name}")
+        # segment_min/max fill empty segments with the dtype extremum, which
+        # already equals our identity; segment_sum fills 0 == identity.
+        return out
+
+    def psum_like(self, x, axis_name):
+        """Cross-worker reduction matching this combiner."""
+        if self.name == "sum":
+            return jax.lax.psum(x, axis_name)
+        if self.name == "min":
+            return jax.lax.pmin(x, axis_name)
+        if self.name == "max":
+            return jax.lax.pmax(x, axis_name)
+        if self.name == "or":
+            return jax.lax.pmax(x.astype(jnp.int32), axis_name).astype(x.dtype)
+        if self.name in ("prod", "min_by_first"):
+            g = jax.lax.all_gather(x, axis_name)
+            if self.name == "prod":
+                return jnp.prod(g, axis=0)
+            out = g[0]
+            for i in range(1, g.shape[0]):
+                out = self.fn(out, g[i])
+            return out
+        raise ValueError(self.name)
+
+
+def _min_by_first(a, b):
+    """Lexicographic argmin on the trailing dim's first component, carrying
+    the rest of the vector as payload (Boruvka's (weight, src, dst))."""
+    take_a = a[..., :1] <= b[..., :1]
+    return jnp.where(take_a, a, b)
+
+
+SUM = Combiner("sum", jnp.add, 0.0)
+MIN = Combiner("min", jnp.minimum, np.inf)
+MAX = Combiner("max", jnp.maximum, -np.inf)
+OR = Combiner("or", jnp.logical_or, False)
+PROD = Combiner("prod", jnp.multiply, 1.0)
+MIN_BY_FIRST = Combiner("min_by_first", _min_by_first, np.inf)
+
+BY_NAME = {c.name: c for c in (SUM, MIN, MAX, OR, PROD, MIN_BY_FIRST)}
+
+
+def get(name_or_combiner) -> Combiner:
+    if isinstance(name_or_combiner, Combiner):
+        return name_or_combiner
+    return BY_NAME[name_or_combiner]

@@ -1,0 +1,160 @@
+"""Standard message-passing channels (paper Table I).
+
+DirectMessage — arbitrary (dst, payload) messages; the receiver iterates
+over deliveries. CombinedMessage — a combiner is applied both sender-side
+(per destination, before the exchange) and receiver-side, yielding a dense
+per-vertex combined value. Both use dynamic sort-based routing, and both
+put destination ids on the wire — the costs the optimized channels remove.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import combiners as cb
+from repro.core import routing
+from repro.core.channel import ChannelContext, payload_width
+from repro.kernels import ops as kops
+
+
+@dataclasses.dataclass
+class Delivery:
+    """Messages delivered to this worker (flattened over peers)."""
+
+    dst_local: jax.Array   # (K,) int32 local destination index (n_loc pad)
+    payload: Any           # pytree of (K, ...) arrays
+    mask: jax.Array        # (K,) bool
+    overflow: jax.Array    # () bool
+
+
+def direct_send(
+    ctx: ChannelContext,
+    dst: jax.Array,
+    valid: jax.Array,
+    payload,
+    capacity: int,
+    *,
+    name: str = "direct_message",
+    id_bytes: int = 4,
+    wire_width: int = None,
+) -> Delivery:
+    """DirectMessage: deliver (dst, payload) messages to dst's owner.
+
+    wire_width overrides the accounted per-message payload width (used by
+    the monolithic-Pregel emulation where every message is padded to the
+    program-wide maximum message type)."""
+    routed = routing.route(ctx, dst, valid, payload, capacity)
+    remote = routing.remote_count(ctx, routed.sent_count)
+    width = id_bytes + (wire_width if wire_width is not None
+                        else payload_width(payload))
+    ctx.add_traffic(name, remote * width, remote)
+    w, c = ctx.num_workers, capacity
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((w * c,) + x.shape[2:]), routed.payload
+    )
+    ids = routed.ids.reshape(-1)
+    dst_local = jnp.where(
+        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
+    ).astype(jnp.int32)
+    return Delivery(
+        dst_local=dst_local,
+        payload=flat,
+        mask=routed.mask.reshape(-1),
+        overflow=routed.overflow,
+    )
+
+
+def combined_send(
+    ctx: ChannelContext,
+    dst: jax.Array,
+    valid: jax.Array,
+    vals: jax.Array,
+    combiner,
+    capacity: int,
+    *,
+    name: str = "combined_message",
+    use_kernel: Optional[bool] = None,
+    wire_width: int = None,
+):
+    """CombinedMessage: sender-side combine per destination, route, then
+    receiver-side combine to a dense (n_loc, D) array.
+
+    Returns (combined (n_loc,[D]), got_any (n_loc,) bool, overflow).
+    """
+    combiner = cb.get(combiner)
+    squeeze = vals.ndim == 1
+    v = vals[:, None] if squeeze else vals
+    m, d = v.shape
+    ident = combiner.ident_for(v.dtype)
+
+    # sender-side combine: sort by dst, reduce runs, keep one entry per dst
+    key = jnp.where(valid, dst.astype(jnp.int32), routing.BIG)
+    order = jnp.argsort(key)
+    sdst = key[order]
+    sval = jnp.where((sdst != routing.BIG)[:, None], v[order], ident)
+    prev = jnp.concatenate([jnp.full((1,), -1, sdst.dtype), sdst[:-1]])
+    first = (sdst != prev) & (sdst != routing.BIG)
+    run = jnp.cumsum(first.astype(jnp.int32)) - 1  # run id per sorted pos
+    run = jnp.where(sdst != routing.BIG, run, m)
+    combined = kops.segment_combine(
+        sval, run, m, combiner, use_kernel=use_kernel, assume_sorted=True
+    )  # (m, d) value per run id
+    # unique dst per run id
+    u_dst = jnp.full((m + 1,), routing.BIG, jnp.int32)
+    u_dst = u_dst.at[jnp.where(first, run, m)].set(sdst, mode="drop")
+    u_dst = u_dst[:m]
+
+    routed = routing.route(
+        ctx, u_dst, u_dst != routing.BIG, {"v": combined}, capacity
+    )
+    remote = routing.remote_count(ctx, routed.sent_count)
+    width = 4 + (wire_width if wire_width is not None
+                 else d * jnp.dtype(v.dtype).itemsize)
+    ctx.add_traffic(name, remote * width, remote)
+
+    w, c = ctx.num_workers, capacity
+    flat_v = routed.payload["v"].reshape(w * c, d)
+    ids = routed.ids.reshape(-1)
+    dst_local = jnp.where(
+        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
+    ).astype(jnp.int32)
+    flat_v = jnp.where(routed.mask.reshape(-1)[:, None], flat_v, ident)
+    out = kops.segment_combine(flat_v, dst_local, ctx.n_loc, combiner,
+                               use_kernel=False)
+    got = (
+        jax.ops.segment_sum(
+            routed.mask.reshape(-1).astype(jnp.int32), dst_local, ctx.n_loc
+        )
+        > 0
+    )
+    return (out[:, 0] if squeeze else out), got, routed.overflow
+
+
+def monolithic_send(
+    ctx: ChannelContext,
+    dst: jax.Array,
+    valid: jax.Array,
+    payload,
+    capacity: int,
+    *,
+    pad_width: int,
+    name: str = "pregel_message",
+) -> Delivery:
+    """Pregel-monolithic emulation (Table IV baseline): every message is
+    padded to the program-wide maximum message width `pad_width`, and no
+    per-channel combiner can be applied."""
+    routed = routing.route(ctx, dst, valid, payload, capacity)
+    remote = routing.remote_count(ctx, routed.sent_count)
+    ctx.add_traffic(name, remote * (4 + pad_width), remote)
+    w, c = ctx.num_workers, capacity
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((w * c,) + x.shape[2:]), routed.payload
+    )
+    ids = routed.ids.reshape(-1)
+    dst_local = jnp.where(
+        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
+    ).astype(jnp.int32)
+    return Delivery(dst_local, flat, routed.mask.reshape(-1), routed.overflow)

@@ -1,0 +1,74 @@
+"""Request-Respond channel (paper §IV-C2).
+
+Every vertex may request an attribute of any other vertex. The channel
+dedups requests to the same destination per worker (sort + unique), sends
+only unique ids, and the responder replies with a *positionally ordered
+value list* — no ids on the respond wire. This is the paper's fix for the
+respond-phase imbalance caused by high-degree vertices, plus its byte
+trick (reply in request order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing
+from repro.core.channel import ChannelContext
+
+
+def request(
+    ctx: ChannelContext,
+    dst: jax.Array,
+    valid: jax.Array,
+    respond_vals: jax.Array,
+    capacity: int,
+    *,
+    name: str = "request_respond",
+):
+    """Request `respond_vals[dst]` for each valid request.
+
+    Args:
+      dst: (R,) int32 global ids to query.
+      valid: (R,) bool.
+      respond_vals: (n_loc,) or (n_loc, D) — the per-vertex attribute the
+        responder exposes (the paper's user-provided f(vertex)).
+      capacity: per-peer unique-request capacity.
+    Returns:
+      (resp (R,[D]), overflow) — responses aligned with `dst` (zeros for
+      invalid requests).
+    """
+    squeeze = respond_vals.ndim == 1
+    rv = respond_vals[:, None] if squeeze else respond_vals
+    d = rv.shape[-1]
+    r = dst.shape[0]
+
+    # --- dedup: sort by destination, keep one entry per unique dst ---
+    key = jnp.where(valid, dst.astype(jnp.int32), routing.BIG)
+    order = jnp.argsort(key)
+    sdst = key[order]
+    prev = jnp.concatenate([jnp.full((1,), -1, sdst.dtype), sdst[:-1]])
+    first = (sdst != prev) & (sdst != routing.BIG)
+    run = jnp.cumsum(first.astype(jnp.int32)) - 1
+    u_dst = jnp.full((r + 1,), routing.BIG, jnp.int32)
+    u_dst = u_dst.at[jnp.where(first, run, r)].set(sdst, mode="drop")[:r]
+    u_valid = u_dst != routing.BIG
+
+    # --- request phase: ids only ---
+    routed = routing.route(ctx, u_dst, u_valid, {}, capacity)
+    remote = routing.remote_count(ctx, routed.sent_count)
+    ctx.add_traffic(name + "/request", remote * 4, remote)
+
+    # --- respond phase: positional values, no ids ---
+    lidx = jnp.where(routed.mask, routed.ids - ctx.me() * ctx.n_loc, ctx.n_loc)
+    rv_pad = jnp.concatenate([rv, jnp.zeros((1, d), rv.dtype)], axis=0)
+    resp = rv_pad[jnp.clip(lidx, 0, ctx.n_loc)]  # (W, C, D)
+    back = routing.reply(ctx, routed, {"v": resp}, m=r)["v"]  # (R, D) per-unique
+    ctx.add_traffic(
+        name + "/respond", remote * d * jnp.dtype(rv.dtype).itemsize, remote
+    )
+
+    # --- expand to all requests (sorted order), then un-permute ---
+    per_sorted = back[jnp.clip(run, 0, r - 1)]
+    per_sorted = jnp.where((sdst != routing.BIG)[:, None], per_sorted, 0)
+    out = jnp.zeros((r, d), rv.dtype).at[order].set(per_sorted, mode="drop")
+    return (out[:, 0] if squeeze else out), routed.overflow

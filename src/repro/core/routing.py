@@ -1,0 +1,125 @@
+"""Dynamic sort-based message routing (the TPU stand-in for hash routing).
+
+Messages are (destination-global-id, payload) pairs with a validity mask.
+Routing sorts by destination, buckets by owner (contiguous in the sorted
+order because ownership is by id range), packs into a capacity-bounded
+(W, C, ...) buffer and exchanges it with one tiled ``all_to_all``.
+
+Used by DirectMessage / CombinedMessage / RequestRespond; the
+scatter-combine channel avoids all of this via its static plan — that gap
+is exactly the optimization the paper measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BIG = jnp.iinfo(jnp.int32).max
+
+
+@dataclasses.dataclass
+class Routed:
+    """Per-shard result of a routed exchange."""
+
+    ids: jax.Array        # (W, C) int32 global dst ids received (BIG pad)
+    mask: jax.Array       # (W, C) bool
+    payload: Any          # pytree of (W, C, ...) arrays
+    # sender-side bookkeeping for positional reply (RequestRespond):
+    order: jax.Array      # (M,) argsort permutation used
+    slot: jax.Array       # (M,) slot of each *sorted* message (W*C = dropped)
+    sent_count: jax.Array  # (W,) messages sent per peer
+    overflow: jax.Array   # () bool — capacity exceeded (surfaced, not silent)
+
+
+def _pack(leaf_sorted, slot, cap, fill):
+    shape = (cap + 1,) + leaf_sorted.shape[1:]
+    buf = jnp.full(shape, fill, leaf_sorted.dtype)
+    buf = buf.at[slot].set(leaf_sorted, mode="drop")
+    return buf[:cap]
+
+
+def route(ctx, dst, valid, payload, capacity: int, *, exchange_payload=True):
+    """Route messages to the owners of their destination vertices.
+
+    Args:
+      ctx: ChannelContext (axis/W/n_loc).
+      dst: (M,) int32 global destination ids.
+      valid: (M,) bool.
+      payload: pytree of (M, ...) arrays (may be empty dict).
+      capacity: per-peer slot capacity C.
+    Returns:
+      Routed — received ids/mask/payload plus sender bookkeeping.
+    """
+    W, n_loc, ax = ctx.num_workers, ctx.n_loc, ctx.axis
+    m = dst.shape[0]
+    c = capacity
+    key = jnp.where(valid, dst.astype(jnp.int32), BIG)
+    order = jnp.argsort(key)
+    sdst = key[order]
+    svalid = sdst != BIG
+    bounds = jnp.searchsorted(
+        sdst, jnp.arange(W + 1, dtype=jnp.int32) * n_loc, side="left"
+    ).astype(jnp.int32)
+    owner = jnp.clip(sdst // n_loc, 0, W - 1)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    slot_in = pos - bounds[owner]
+    fits = slot_in < c
+    overflow = jnp.any(svalid & ~fits)
+    slot = jnp.where(svalid & fits, owner * c + slot_in, W * c)
+
+    send_ids = _pack(sdst, slot, W * c, BIG).reshape(W, c)
+    recv_ids = jax.lax.all_to_all(send_ids, ax, 0, 0, tiled=True)
+    recv_mask = recv_ids != BIG
+
+    sorted_payload = jax.tree_util.tree_map(lambda x: x[order], payload)
+    if exchange_payload:
+        def xch(leaf):
+            packed = _pack(leaf, slot, W * c, 0).reshape((W, c) + leaf.shape[1:])
+            return jax.lax.all_to_all(packed, ax, 0, 0, tiled=True)
+        recv_payload = jax.tree_util.tree_map(xch, sorted_payload)
+    else:
+        recv_payload = None
+
+    sent_count = bounds[1:] - bounds[:-1]
+    return Routed(
+        ids=recv_ids,
+        mask=recv_mask,
+        payload=recv_payload,
+        order=order,
+        slot=slot,
+        sent_count=sent_count,
+        overflow=overflow,
+    )
+
+
+def reply(ctx, routed: Routed, resp, m: int):
+    """Send per-slot responses back (positionally — no ids on the wire) and
+    un-permute to the original message order.
+
+    Args:
+      routed: the Routed from the request phase.
+      resp: pytree of (W, C, ...) responses aligned with routed.ids.
+      m: number of original messages.
+    Returns:
+      pytree of (M, ...) responses in original message order.
+    """
+    ax = ctx.axis
+
+    def xch_back(leaf):
+        back = jax.lax.all_to_all(leaf, ax, 0, 0, tiled=True)  # (W, C, ...)
+        flat = back.reshape((-1,) + leaf.shape[2:])
+        flat = jnp.concatenate([flat, jnp.zeros_like(flat[:1])], axis=0)
+        per_sorted = flat[jnp.minimum(routed.slot, flat.shape[0] - 1)]
+        out = jnp.zeros((m,) + per_sorted.shape[1:], per_sorted.dtype)
+        return out.at[routed.order].set(per_sorted, mode="drop")
+
+    return jax.tree_util.tree_map(xch_back, resp)
+
+
+def remote_count(ctx, sent_count):
+    """Messages that actually cross a worker boundary (exclude self)."""
+    me = ctx.me()
+    return sent_count.sum() - sent_count[me]

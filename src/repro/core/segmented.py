@@ -1,0 +1,65 @@
+"""Generic segmented reduction for custom (non-lattice) combiners.
+
+``jax.ops.segment_*`` covers sum/min/max; channels also allow arbitrary
+associative+commutative combiners (e.g. min-by-key with payload, used by
+Boruvka MSF). This implements the same segmented Hillis-Steele scan the
+Pallas kernel uses, in pure jnp, over sorted segment ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segmented_reduce_sorted(vals, seg, num_segments, combine_fn, ident_of):
+    """Reduce `vals` within runs of equal (sorted) `seg`.
+
+    Args:
+      vals: pytree of (M, ...) arrays.
+      seg: (M,) int32 sorted segment ids; ids >= num_segments are dropped.
+      combine_fn: pytree-wise binary combiner (applied leaf-wise via tree_map
+        if given a pair of pytrees; here we apply to the whole pytree).
+      ident_of: callable leaf -> identity array of same shape/dtype.
+    Returns:
+      pytree of (num_segments, ...) reduced values (identity if empty).
+    """
+    m = seg.shape[0]
+    leaves, treedef = jax.tree_util.tree_flatten(vals)
+
+    def scan_step(vs, shift):
+        prev_s = jnp.concatenate([jnp.full((shift,), -1, seg.dtype), seg[:-shift]])
+        same = prev_s == seg
+        shifted = [
+            jnp.concatenate([ident_of(v)[:shift], v[:-shift]], axis=0) for v in vs
+        ]
+        a = jax.tree_util.tree_unflatten(treedef, vs)
+        b = jax.tree_util.tree_unflatten(treedef, shifted)
+        combined = combine_fn(a, b)
+        cl = jax.tree_util.tree_leaves(combined)
+        out = []
+        for v, c in zip(vs, cl):
+            mask = same.reshape((m,) + (1,) * (v.ndim - 1))
+            out.append(jnp.where(mask, c, v))
+        return out
+
+    shift = 1
+    while shift < m:
+        leaves = scan_step(leaves, shift)
+        shift *= 2
+
+    # last position of each segment
+    last = jnp.searchsorted(
+        seg, jnp.arange(num_segments, dtype=seg.dtype), side="right"
+    ) - 1
+    first = jnp.searchsorted(
+        seg, jnp.arange(num_segments, dtype=seg.dtype), side="left"
+    )
+    nonempty = last >= first
+
+    def pick(v):
+        got = v[jnp.clip(last, 0, m - 1)]
+        idn = ident_of(v)[:1]
+        mask = nonempty.reshape((num_segments,) + (1,) * (v.ndim - 1))
+        return jnp.where(mask, got, jnp.broadcast_to(idn, got.shape))
+
+    return jax.tree_util.tree_unflatten(treedef, [pick(v) for v in leaves])

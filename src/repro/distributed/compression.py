@@ -1,0 +1,53 @@
+"""Gradient compression — the Aggregator channel's optimized variant.
+
+The paper's point applied to training: the gradient all-reduce is one
+typed channel, so its wire format can be optimized independently of the
+rest of the program. bf16 compression halves the DP all-reduce bytes
+(the dominant collective for FSDP training); error feedback keeps the
+fp32 master-accumulation unbiased across steps.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class CompressionState(NamedTuple):
+    error: Any  # error-feedback residual, params-shaped (or None)
+
+
+def init_state(params, error_feedback: bool = True) -> CompressionState:
+    if not error_feedback:
+        return CompressionState(error=None)
+    return CompressionState(
+        error=jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    )
+
+
+def compress_grads(grads, state: CompressionState, dtype=jnp.bfloat16):
+    """Quantize grads to `dtype` with error feedback. Returns
+    (compressed_grads, new_state). Apply BEFORE the step's psum/update so
+    the all-reduce moves half the bytes."""
+    if state.error is None:
+        comp = jax.tree_util.tree_map(lambda g: g.astype(dtype), grads)
+        return comp, state
+
+    def comp_one(g, e):
+        gf = g.astype(jnp.float32) + e
+        q = gf.astype(dtype)
+        new_e = gf - q.astype(jnp.float32)
+        return q, new_e
+
+    out = jax.tree_util.tree_map(comp_one, grads, state.error)
+    comp = jax.tree_util.tree_map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    err = jax.tree_util.tree_map(lambda t: t[1], out,
+                                 is_leaf=lambda t: isinstance(t, tuple))
+    return comp, CompressionState(error=err)
+
+
+def decompress_grads(grads):
+    return jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)

@@ -1,0 +1,78 @@
+"""Activation-sharding context.
+
+The model code stays mesh-agnostic; the launcher (dry-run / trainer)
+activates this context while TRACING so that `constrain()` pins the few
+activation shardings GSPMD gets wrong on its own (notably: keep logits
+vocab-sharded through the loss instead of all-gathering (B,S,V)).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_TLS = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    dp: Tuple[str, ...]   # data-parallel axes ("pod","data") / ("data",)
+    tp: str = "model"
+    seq_parallel: bool = False  # shard the residual stream's seq dim on tp
+
+
+def current() -> Optional[ShardCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+DEFAULT_SEQ_PARALLEL = False  # flipped by launchers (--seq-parallel)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, seq_parallel=None):
+    if seq_parallel is None:
+        seq_parallel = DEFAULT_SEQ_PARALLEL
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = ShardCtx(mesh=mesh, dp=dp, seq_parallel=seq_parallel)
+    try:
+        yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def constrain(x, *logical):
+    """logical entries: 'dp' (batch), 'tp' (model axis), None. Only applies
+    to dims that divide the axis size; no-op outside the context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    axes = []
+    for dim, l in zip(x.shape, logical):
+        if l == "dp":
+            import numpy as np
+            n = int(np.prod([ctx.mesh.shape[a] for a in ctx.dp]))
+            axes.append(ctx.dp if dim % n == 0 else None)
+        elif l == "tp":
+            axes.append(ctx.tp if dim % ctx.mesh.shape[ctx.tp] == 0 else None)
+        else:
+            axes.append(None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(*axes))
+    )
+
+
+def residual_spec():
+    """Logical spec for the (B, S, D) residual stream: seq-parallel shards
+    the sequence dim over the model axis (Megatron-SP — norms/residuals
+    compute on 1/TP of the tokens and the TP all-reduce becomes
+    reduce-scatter + all-gather pairs placed by XLA)."""
+    ctx = current()
+    if ctx is not None and ctx.seq_parallel:
+        return ("dp", "tp", None)
+    return ("dp", None, None)

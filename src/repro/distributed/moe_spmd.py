@@ -1,0 +1,75 @@
+"""SPMD MoE: the routed-expert layer as an explicit shard_map channel.
+
+Tokens stay local to their data shard (request dedup/sort is shard-local),
+experts live on the model axis (EP) or are ff-sliced across it (expert-TP
+when the expert count doesn't divide the axis). Each model shard computes
+only its share and the outputs combine with one psum over "model" — the
+request-respond channel pattern lowered to a single mesh collective,
+instead of letting GSPMD emit a global all-gather+sort for the dispatch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed import sharding as sh
+from repro.models import layers
+from repro.models.config import ModelConfig
+
+
+def make_spmd_moe(cfg: ModelConfig, mesh: Mesh):
+    ep = sh.ep_enabled(cfg, mesh)
+    dp = sh.dp_axes(mesh)
+    m = mesh.shape["model"]
+    all_axes = tuple(mesh.axis_names)
+
+    if ep:
+        w1_spec = P("model", None, None)
+        w2_spec = P("model", None, None)
+        e_loc = cfg.moe_experts // m
+    else:
+        w1_spec = P(None, None, "model")
+        w2_spec = P(None, "model", None)
+        e_loc = cfg.moe_experts
+
+    def routed(lp_r, x):
+        b, s, d = x.shape
+        x_spec = P(dp) if b % sh.axis_size(mesh, dp) == 0 else P()
+
+        def local(router, w1, w2, w3, xs):
+            bl, sl, _ = xs.shape
+            lo = jax.lax.axis_index("model") * e_loc if ep else 0
+            lp_local = {"router": router, "moe_w1": w1, "moe_w2": w2}
+            if w3 is not None:
+                lp_local["moe_w3"] = w3
+            y = layers.moe_local(
+                cfg, lp_local, xs.reshape(bl * sl, d),
+                expert_lo=lo, n_local_experts=w1.shape[0],
+            )
+            y = jax.lax.psum(y, "model")
+            return y.reshape(bl, sl, d)
+
+        w3 = lp_r.get("moe_w3")
+        return jax.shard_map(
+            local,
+            mesh=mesh,
+            in_specs=(P(), w1_spec, w2_spec,
+                      None if w3 is None else w1_spec, x_spec),
+            out_specs=x_spec,
+            check_vma=False,
+        )(lp_r["router"], lp_r["moe_w1"], lp_r["moe_w2"], w3, x)
+
+    def moe_impl(cfg_, lp, x):
+        y = routed(lp, x)
+        if cfg_.moe_shared_ff:
+            shared = layers.dense_mlp(
+                cfg_, lp["shared_w1"], lp["shared_w2"],
+                lp.get("shared_w3"), x)
+            gate = jax.nn.sigmoid((x @ lp["shared_gate"]).astype(jnp.float32))
+            y = y + shared * gate.astype(x.dtype)
+        return y
+
+    return moe_impl

@@ -1,0 +1,148 @@
+"""Sharding policy: logical parameter axes -> mesh PartitionSpecs.
+
+Mesh axes: ("pod",) "data", "model".
+  - fsdp: weight dim sharded over all data-parallel axes (ZeRO-3);
+  - tp:   weight dim sharded over the model axis;
+  - ep:   expert dim over the model axis when the expert count divides it,
+          otherwise experts stay replicated and their ff dim ("etp") takes
+          the model axis (expert-internal tensor parallelism) — this keeps
+          e.g. Mixtral's 8 experts valid on a 16-way model axis.
+
+Activations: batch over the data axes; KV cache prefers kv-heads over the
+model axis, falling back to the sequence dim when kv-heads don't divide it
+(GQA with few kv heads, e.g. chatglm3's kv=2) — the sequence-parallel
+decode path (partial attention + XLA-inserted softmax collectives).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import params as Pm
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def ep_enabled(cfg: ModelConfig, mesh: Mesh) -> bool:
+    m = mesh.shape["model"]
+    return cfg.moe_experts > 0 and cfg.moe_experts % m == 0
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True):
+    """PartitionSpec tree matching the param tree."""
+    ep = ep_enabled(cfg, mesh)
+    dp = dp_axes(mesh)
+
+    def to_mesh_axes(logical):
+        if logical == "fsdp":
+            return dp if fsdp else None
+        if logical == "tp":
+            return "model"
+        if logical == "ep":
+            return "model" if ep else None
+        if logical == "etp":
+            return None if ep else "model"
+        return None
+
+    axes_tree = Pm.param_axes(cfg)
+    shapes_tree = Pm.param_specs(cfg)
+
+    def spec(axes, sds):
+        mesh_axes = []
+        for dim, logical in zip(sds.shape, axes):
+            ma = to_mesh_axes(logical)
+            if ma is not None and dim % axis_size(mesh, ma) != 0:
+                ma = None  # don't shard indivisible dims (explicit > padded)
+            mesh_axes.append(ma)
+        while mesh_axes and mesh_axes[-1] is None:
+            mesh_axes.pop()
+        return P(*mesh_axes)
+
+    return jax.tree_util.tree_map(
+        spec, axes_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x),
+    )
+
+
+def batch_pspecs(cfg: ModelConfig, mesh: Mesh, batch_specs_tree,
+                 global_batch: int):
+    """Input batch sharding: leading batch dim over the data axes."""
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    baxes = dp if global_batch % dp_n == 0 else (
+        dp[-1] if global_batch % mesh.shape[dp[-1]] == 0 else None)
+
+    def spec(sds):
+        if sds.ndim == 0:
+            return P()
+        return P(baxes)
+
+    return jax.tree_util.tree_map(spec, batch_specs_tree)
+
+
+def cache_pspecs(cfg: ModelConfig, mesh: Mesh, cache_specs_tree,
+                 batch: int):
+    """Decode-cache sharding (leaves stacked (nb, B, ...))."""
+    dp = dp_axes(mesh)
+    dp_n = axis_size(mesh, dp)
+    m = mesh.shape["model"]
+    baxes = dp if batch % dp_n == 0 else None
+    kv_heads_shardable = cfg.n_kv_heads % m == 0
+
+    def spec_path(path, sds):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name in ("k", "v"):
+            # (nb, B, S, Hkv, hd)
+            if kv_heads_shardable:
+                return P(None, baxes, None, "model", None)
+            s = sds.shape[2]
+            seq_ax = "model" if s % m == 0 else None
+            if baxes is None and seq_ax is not None and s % (m * dp_n) == 0:
+                # long-context decode: sequence-parallel over data+model
+                return P(None, None, (*dp, "model"), None, None)
+            return P(None, baxes, seq_ax, None, None)
+        if name == "ssm":
+            # (nb, B, H, P, N)
+            h = sds.shape[2]
+            return P(None, baxes, "model" if h % m == 0 else None, None, None)
+        if name in ("conv_x",):
+            c = sds.shape[-1]
+            return P(None, baxes, None, "model" if c % m == 0 else None)
+        return P(None, baxes)
+
+    return jax.tree_util.tree_map_with_path(spec_path, cache_specs_tree)
+
+
+def train_state_pspecs(cfg: ModelConfig, mesh: Mesh, fsdp: bool = True):
+    """TrainState sharding: params, and m/v like params; step replicated."""
+    from repro.train.train_step import TrainState
+    from repro.train.optimizer import AdamWState
+    p = param_pspecs(cfg, mesh, fsdp=fsdp)
+    return TrainState(
+        params=p,
+        opt=AdamWState(step=P(), m=p, v=p),
+    )
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,339 @@
+"""PartitionedGraph — static-shape distributed graph with channel plans.
+
+All routing decisions that the paper's system makes with per-message
+hashing are precomputed here (host-side numpy) into dense, static-shape
+plans. Arrays carry a leading ``W`` (worker) axis; the Pregel runtime maps
+step functions over it with ``vmap`` (logical workers on one device) or
+``shard_map`` (real mesh), and channels communicate via axis-name
+collectives — identical code in both modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import partition as partition_lib
+from repro.graph.generators import EdgeList
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+class HostArray:
+    """Host-side numpy array kept OUT of the jax pytree (static aux data
+    with identity hashing — it never changes after construction)."""
+
+    def __init__(self, arr):
+        self.arr = np.asarray(arr)
+
+    def __hash__(self):
+        return id(self)
+
+    def __eq__(self, other):
+        return other is self
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ScatterPlan:
+    """Static routing plan for the scatter-combine pattern.
+
+    Per worker: local edges sorted by destination, sender-side dedup to one
+    entry per unique destination, positional slots into the all_to_all
+    buffer (no vertex ids on the wire), and the receive-side local indices.
+    """
+
+    edge_src: jax.Array      # (W, E_cap) i32 local src idx (pad 0, masked by seg)
+    edge_seg: jax.Array      # (W, E_cap) i32 unique-dst index (pad U_cap: dropped)
+    edge_w: Optional[jax.Array]  # (W, E_cap) f32 edge weights or None
+    pack_slot: jax.Array     # (W, U_cap) i32 slot in (W*C) send buf (pad W*C)
+    recv_local: jax.Array    # (W, W, C) i32 local dst idx (pad n_loc)
+    send_count: jax.Array    # (W, W) i32 real entries per peer
+    # static metadata
+    n_loc: int = dataclasses.field(metadata=dict(static=True))
+    num_workers: int = dataclasses.field(metadata=dict(static=True))
+    e_cap: int = dataclasses.field(metadata=dict(static=True))
+    u_cap: int = dataclasses.field(metadata=dict(static=True))
+    slot_cap: int = dataclasses.field(metadata=dict(static=True))
+    remote_entries: int = dataclasses.field(metadata=dict(static=True))
+    total_edges: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RawEdges:
+    """Unsorted per-worker edge lists (src local) — what the *baseline*
+    message channels iterate over each superstep (no preprocessing)."""
+
+    src_local: jax.Array   # (W, E_cap) i32
+    dst_global: jax.Array  # (W, E_cap) i32
+    w: Optional[jax.Array]  # (W, E_cap) f32
+    mask: jax.Array        # (W, E_cap) bool
+    e_cap: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PropPlan:
+    """Plan for the propagation channel: partition-internal CSR (for the
+    local fixpoint) + a ScatterPlan over cut edges (for global exchange)."""
+
+    int_src: jax.Array       # (W, Ei_cap) i32 local src idx
+    int_dst: jax.Array       # (W, Ei_cap) i32 local dst idx, sorted (pad n_loc)
+    int_w: Optional[jax.Array]   # (W, Ei_cap) f32
+    cut: ScatterPlan
+    ei_cap: int = dataclasses.field(metadata=dict(static=True))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class PartitionedGraph:
+    v_mask: jax.Array        # (W, n_loc) bool
+    deg_out: jax.Array       # (W, n_loc) i32
+    scatter_out: Optional[ScatterPlan]
+    scatter_in: Optional[ScatterPlan]
+    prop_out: Optional[PropPlan]
+    prop_in: Optional[PropPlan]
+    raw_out: Optional[RawEdges]
+    raw_in: Optional[RawEdges]
+    n: int = dataclasses.field(metadata=dict(static=True))
+    num_workers: int = dataclasses.field(metadata=dict(static=True))
+    n_loc: int = dataclasses.field(metadata=dict(static=True))
+    directed: bool = dataclasses.field(metadata=dict(static=True))
+    name: str = dataclasses.field(metadata=dict(static=True))
+    new_of_old: HostArray = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n_pad(self) -> int:
+        return self.num_workers * self.n_loc
+
+    def to_local(self, per_vertex_np):
+        """(n,) old-id host array -> (W, n_loc) device array in new-id space."""
+        arr = np.asarray(per_vertex_np)
+        out_shape = (self.n_pad,) + arr.shape[1:]
+        out = np.zeros(out_shape, dtype=arr.dtype)
+        out[self.new_of_old.arr] = arr
+        return jnp.asarray(out.reshape((self.num_workers, self.n_loc) + arr.shape[1:]))
+
+    def to_global(self, per_local):
+        """(W, n_loc, ...) device array -> (n,) host array in old-id space."""
+        flat = np.asarray(per_local).reshape((self.n_pad,) + per_local.shape[2:])
+        return flat[self.new_of_old.arr]
+
+    def global_ids(self):
+        """(W, n_loc) the new-space global id of every slot."""
+        return (
+            jnp.arange(self.num_workers, dtype=jnp.int32)[:, None] * self.n_loc
+            + jnp.arange(self.n_loc, dtype=jnp.int32)[None, :]
+        )
+
+
+def _build_scatter_plan(
+    src_new: np.ndarray,
+    dst_new: np.ndarray,
+    weights: Optional[np.ndarray],
+    n_workers: int,
+    n_loc: int,
+    align: int = 8,
+) -> ScatterPlan:
+    W = n_workers
+    owner_src = src_new // n_loc
+
+    e_caps, u_caps, c_caps = [], [], []
+    per_worker = []
+    for w in range(W):
+        sel = owner_src == w
+        s, d = src_new[sel], dst_new[sel]
+        wt = weights[sel] if weights is not None else None
+        order = np.lexsort((s, d))
+        s, d = s[order], d[order]
+        wt = wt[order] if wt is not None else None
+        u, seg = np.unique(d, return_inverse=True) if len(d) else (
+            np.zeros(0, np.int64), np.zeros(0, np.int64))
+        owners_u = u // n_loc
+        cnt = np.bincount(owners_u, minlength=W)
+        per_worker.append((s, d, wt, u, seg, owners_u, cnt))
+        e_caps.append(len(s))
+        u_caps.append(len(u))
+        c_caps.append(cnt.max(initial=0))
+
+    e_cap = _round_up(max(max(e_caps), 1), align)
+    u_cap = _round_up(max(max(u_caps), 1), align)
+    c = _round_up(max(max(c_caps), 1), align)
+
+    edge_src = np.zeros((W, e_cap), np.int32)
+    edge_seg = np.full((W, e_cap), u_cap, np.int32)
+    edge_w = np.zeros((W, e_cap), np.float32) if weights is not None else None
+    pack_slot = np.full((W, u_cap), W * c, np.int32)
+    recv_local = np.full((W, W, c), n_loc, np.int32)
+    send_count = np.zeros((W, W), np.int32)
+    remote = 0
+    total = 0
+
+    for w in range(W):
+        s, d, wt, u, seg, owners_u, cnt = per_worker[w]
+        k, e = len(u), len(s)
+        total += e
+        edge_src[w, :e] = (s - w * n_loc).astype(np.int32)
+        edge_seg[w, :e] = seg.astype(np.int32)
+        if edge_w is not None and e:
+            edge_w[w, :e] = wt
+        starts = np.concatenate([[0], np.cumsum(cnt)])[:-1]  # (W,)
+        # u is sorted by global id => grouped by owner, contiguous
+        rank = np.arange(k) - starts[owners_u]
+        pack_slot[w, :k] = (owners_u * c + rank).astype(np.int32)
+        send_count[w] = cnt.astype(np.int32)
+        remote += int(cnt.sum() - cnt[w])
+        # receive side: peer w sends to owner p its u entries owned by p
+        for p in range(W):
+            mine = u[owners_u == p]
+            recv_local[p, w, : len(mine)] = (mine - p * n_loc).astype(np.int32)
+
+    return ScatterPlan(
+        edge_src=jnp.asarray(edge_src),
+        edge_seg=jnp.asarray(edge_seg),
+        edge_w=jnp.asarray(edge_w) if edge_w is not None else None,
+        pack_slot=jnp.asarray(pack_slot),
+        recv_local=jnp.asarray(recv_local),
+        send_count=jnp.asarray(send_count),
+        n_loc=n_loc,
+        num_workers=W,
+        e_cap=e_cap,
+        u_cap=u_cap,
+        slot_cap=c,
+        remote_entries=remote,
+        total_edges=total,
+    )
+
+
+def _build_prop_plan(
+    src_new, dst_new, weights, n_workers, n_loc, align=8
+) -> PropPlan:
+    W = n_workers
+    owner_s = src_new // n_loc
+    owner_d = dst_new // n_loc
+    internal = owner_s == owner_d
+    cut = ~internal
+
+    # internal CSR (per worker, sorted by local dst)
+    ei = 0
+    per_worker = []
+    for w in range(W):
+        sel = internal & (owner_s == w)
+        s = (src_new[sel] - w * n_loc).astype(np.int32)
+        d = (dst_new[sel] - w * n_loc).astype(np.int32)
+        wt = weights[sel] if weights is not None else None
+        order = np.lexsort((s, d))
+        per_worker.append((s[order], d[order], wt[order] if wt is not None else None))
+        ei = max(ei, len(s))
+    ei_cap = _round_up(max(ei, 1), align)
+    int_src = np.zeros((W, ei_cap), np.int32)
+    int_dst = np.full((W, ei_cap), n_loc, np.int32)
+    int_w = np.zeros((W, ei_cap), np.float32) if weights is not None else None
+    for w in range(W):
+        s, d, wt = per_worker[w]
+        int_src[w, : len(s)] = s
+        int_dst[w, : len(d)] = d
+        if int_w is not None and len(s):
+            int_w[w, : len(s)] = wt
+
+    cut_plan = _build_scatter_plan(
+        src_new[cut], dst_new[cut],
+        weights[cut] if weights is not None else None,
+        n_workers, n_loc, align,
+    )
+    return PropPlan(
+        int_src=jnp.asarray(int_src),
+        int_dst=jnp.asarray(int_dst),
+        int_w=jnp.asarray(int_w) if int_w is not None else None,
+        cut=cut_plan,
+        ei_cap=ei_cap,
+    )
+
+
+def _build_raw_edges(src_new, dst_new, weights, n_workers, n_loc, align=8) -> RawEdges:
+    W = n_workers
+    owner = src_new // n_loc
+    counts = [int((owner == w).sum()) for w in range(W)]
+    e_cap = _round_up(max(max(counts, default=0), 1), align)
+    src_l = np.zeros((W, e_cap), np.int32)
+    dst_g = np.zeros((W, e_cap), np.int32)
+    ws = np.zeros((W, e_cap), np.float32) if weights is not None else None
+    mask = np.zeros((W, e_cap), bool)
+    for w in range(W):
+        sel = owner == w
+        e = int(sel.sum())
+        src_l[w, :e] = (src_new[sel] - w * n_loc).astype(np.int32)
+        dst_g[w, :e] = dst_new[sel].astype(np.int32)
+        if ws is not None and e:
+            ws[w, :e] = weights[sel]
+        mask[w, :e] = True
+    return RawEdges(
+        src_local=jnp.asarray(src_l),
+        dst_global=jnp.asarray(dst_g),
+        w=jnp.asarray(ws) if ws is not None else None,
+        mask=jnp.asarray(mask),
+        e_cap=e_cap,
+    )
+
+
+def partition_graph(
+    g: EdgeList,
+    n_workers: int,
+    partitioner: str = "random",
+    seed: int = 0,
+    build=("scatter_out",),
+    align: int = 8,
+) -> PartitionedGraph:
+    """Partition + relabel a graph and precompute the requested plans.
+
+    build: subset of {"scatter_out", "scatter_in", "prop_out", "prop_in"}.
+    """
+    new_of_old = partition_lib.PARTITIONERS[partitioner](g, n_workers, seed)
+    n_loc = _round_up(-(-g.n // n_workers), align)
+    src = new_of_old[g.edges[:, 0]]
+    dst = new_of_old[g.edges[:, 1]]
+    w = g.weights
+
+    W = n_workers
+    v_mask = np.zeros((W, n_loc), bool)
+    flat = v_mask.reshape(-1)
+    flat[np.asarray(new_of_old)] = True
+    deg = np.zeros(W * n_loc, np.int32)
+    np.add.at(deg, src, 1)
+
+    plans = {}
+    if "scatter_out" in build:
+        plans["scatter_out"] = _build_scatter_plan(src, dst, w, W, n_loc, align)
+    if "scatter_in" in build:
+        plans["scatter_in"] = _build_scatter_plan(dst, src, w, W, n_loc, align)
+    if "prop_out" in build:
+        plans["prop_out"] = _build_prop_plan(src, dst, w, W, n_loc, align)
+    if "prop_in" in build:
+        plans["prop_in"] = _build_prop_plan(dst, src, w, W, n_loc, align)
+    if "raw_out" in build:
+        plans["raw_out"] = _build_raw_edges(src, dst, w, W, n_loc, align)
+    if "raw_in" in build:
+        plans["raw_in"] = _build_raw_edges(dst, src, w, W, n_loc, align)
+
+    return PartitionedGraph(
+        v_mask=jnp.asarray(v_mask),
+        deg_out=jnp.asarray(deg.reshape(W, n_loc)),
+        scatter_out=plans.get("scatter_out"),
+        scatter_in=plans.get("scatter_in"),
+        prop_out=plans.get("prop_out"),
+        prop_in=plans.get("prop_in"),
+        raw_out=plans.get("raw_out"),
+        raw_in=plans.get("raw_in"),
+        n=g.n,
+        num_workers=W,
+        n_loc=n_loc,
+        directed=g.directed,
+        name=g.name,
+        new_of_old=HostArray(new_of_old),
+    )

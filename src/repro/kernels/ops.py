@@ -1,0 +1,129 @@
+"""Jit-ready wrappers around the Pallas kernels, with plan building.
+
+``segment_combine`` is the public entry point used by the channels: it
+dispatches to the Pallas kernel (TPU target; interpret=True on CPU) or to
+the pure-jnp reference depending on ``use_kernel``. The kernel path expects
+sorted segment ids (the scatter-combine channel guarantees this by
+construction — that is the paper's preprocessing insight).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import combiners as cb
+from repro.kernels import ref as kref
+from repro.kernels import segment_combine as kseg
+
+# Flipped by tests / benchmarks; CPU default is the reference path (the
+# interpret-mode kernel is a correctness vehicle, not a CPU fast path).
+_USE_KERNEL_DEFAULT = False
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def build_chunk_plan(seg_ids_np, num_segments, block_rows, block_edges):
+    """Host-side (numpy) plan: covering chunk range per output row block.
+
+    Returns (chunk_start, num_chunks, max_chunks) for sorted seg_ids.
+    """
+    seg = np.asarray(seg_ids_np)
+    nb = _round_up(num_segments, block_rows) // block_rows
+    bounds = np.searchsorted(seg, np.arange(nb + 1) * block_rows, side="left")
+    lo, hi = bounds[:-1], bounds[1:]
+    cs = lo // block_edges
+    ce = -(-hi // block_edges)  # ceil
+    nc = np.where(hi > lo, ce - cs, 0).astype(np.int32)
+    return cs.astype(np.int32), nc, int(nc.max(initial=0))
+
+
+def segment_combine(
+    vals,
+    seg_ids,
+    num_segments: int,
+    combiner,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: bool = True,
+    block_rows: int = 128,
+    block_edges: int = 512,
+    chunk_plan=None,
+    assume_sorted: bool = False,
+):
+    """Segment reduction: out[s] = combine(vals[e] for seg_ids[e] == s).
+
+    Entries with seg_ids >= num_segments are dropped. The kernel path
+    requires sorted seg_ids (assume_sorted or it sorts internally).
+    """
+    combiner = cb.get(combiner)
+    use_kernel = _USE_KERNEL_DEFAULT if use_kernel is None else use_kernel
+    if not use_kernel:
+        return kref.segment_combine_ref(vals, seg_ids, num_segments, combiner)
+
+    vals = jnp.asarray(vals)
+    squeeze = vals.ndim == 1
+    if squeeze:
+        vals = vals[:, None]
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    if not assume_sorted:
+        order = jnp.argsort(seg_ids)
+        seg_ids = seg_ids[order]
+        vals = vals[order]
+
+    e, d = vals.shape
+    n_pad = _round_up(max(num_segments, 1), block_rows)
+    e_pad = _round_up(max(e, 1), block_edges)
+    ident = combiner.ident_for(vals.dtype)
+    if e_pad != e:
+        vals = jnp.concatenate(
+            [vals, jnp.full((e_pad - e, d), ident, vals.dtype)], 0
+        )
+        seg_ids = jnp.concatenate(
+            [seg_ids, jnp.full((e_pad - e,), n_pad, jnp.int32)], 0
+        )
+    # Out-of-range (padded/dropped) entries: push past the last row block.
+    seg_ids = jnp.where(
+        (seg_ids < 0) | (seg_ids >= num_segments), n_pad, seg_ids
+    )
+
+    if chunk_plan is None:
+        nb = n_pad // block_rows
+        bounds = jnp.searchsorted(
+            seg_ids, jnp.arange(nb + 1, dtype=jnp.int32) * block_rows, side="left"
+        )
+        lo, hi = bounds[:-1], bounds[1:]
+        cs = lo // block_edges
+        ce = -((-hi) // block_edges)
+        nc = jnp.where(hi > lo, ce - cs, 0).astype(jnp.int32)
+        max_chunks = e_pad // block_edges  # static worst case
+    else:
+        cs, nc, max_chunks = chunk_plan
+
+    out = kseg.segment_combine_pallas(
+        vals,
+        seg_ids,
+        cs,
+        nc,
+        num_segments=n_pad,
+        combiner=combiner,
+        block_rows=block_rows,
+        block_edges=block_edges,
+        max_chunks=max_chunks,
+        interpret=interpret,
+    )[:num_segments]
+    return out[:, 0] if squeeze else out
+
+
+def gather_segment_combine(
+    src_vals, edge_src, seg_ids, num_segments, combiner, **kw
+):
+    """Fused gather + segment combine (SpMV-style). Gather is left to XLA
+    (it fuses with the kernel's input stream); the reduce uses the kernel."""
+    vals = jnp.asarray(src_vals)[jnp.asarray(edge_src, jnp.int32)]
+    return segment_combine(vals, seg_ids, num_segments, combiner, **kw)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for the Pallas kernels in this package."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import combiners as cb
+
+
+def segment_combine_ref(vals, seg_ids, num_segments, combiner):
+    """Segment reduction oracle.
+
+    Args:
+      vals: (E, D) values (padded entries must carry the combiner identity
+        or a seg_id >= num_segments).
+      seg_ids: (E,) int32 destination segment per value.
+      num_segments: static int, number of output rows.
+      combiner: repro.core.combiners.Combiner or name.
+    Returns:
+      (num_segments, D) combined values; empty segments hold the identity.
+    """
+    combiner = cb.get(combiner)
+    seg_ids = jnp.asarray(seg_ids, jnp.int32)
+    # Entries with seg >= num_segments are dropped by segment_* semantics
+    # (indices out of range are ignored in jax.ops.segment_* with
+    # indices_are_sorted=False and num_segments given).
+    return combiner.segment_reduce(vals, seg_ids, num_segments)
+
+
+def gather_segment_combine_ref(src_vals, edge_src, seg_ids, num_segments, combiner):
+    """Fused gather + segment reduction oracle (the SpMV-style hot loop).
+
+    Args:
+      src_vals: (N_src, D) per-source values.
+      edge_src: (E,) int32 source index per edge (padded edges may point
+        anywhere valid; they must carry seg_ids >= num_segments).
+      seg_ids: (E,) int32 destination segment per edge.
+    """
+    combiner = cb.get(combiner)
+    vals = src_vals[jnp.asarray(edge_src, jnp.int32)]
+    return combiner.segment_reduce(vals, jnp.asarray(seg_ids, jnp.int32), num_segments)

@@ -1,0 +1,404 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), print
+memory_analysis / cost_analysis, and extract the collective schedule for
+the roofline (benchmarks/roofline.py reads the JSON this writes).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch mamba2-130m \
+      --shape train_4k [--multi-pod] [--all] [--out results/dryrun]
+"""  # noqa: E402
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.configs import registry  # noqa: E402
+from repro.configs.shapes import ALL_SHAPES  # noqa: E402
+from repro.distributed import sharding as sh  # noqa: E402
+from repro.distributed.context import activation_sharding  # noqa: E402
+from repro.distributed.moe_spmd import make_spmd_moe  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.models import params as Pm  # noqa: E402
+from repro.serve import decode as serve  # noqa: E402
+from repro.train import data as data_lib  # noqa: E402
+from repro.train import train_step as ts  # noqa: E402
+from repro.train.optimizer import AdamW  # noqa: E402
+
+COLLECTIVE_RE = re.compile(
+    r"(\w[\w.\-]*)\s*=\s*([a-z0-9]+\[[^\]]*\])[^=]*?\b"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+TYPE_RE = re.compile(r"([a-z][a-z0-9]+)\[([0-9,]*)\]")
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+
+def type_bytes(tstr: str) -> int:
+    m = TYPE_RE.match(tstr)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dt, 4)
+
+
+def collective_stats(hlo_text: str):
+    """Per-op-kind output bytes of collectives in the per-device program.
+
+    The compiled module is the per-partition program, so shapes are
+    per-device — i.e. bytes that touch this device's links (all-reduce
+    moves ~2x in a ring; reported raw, the roofline applies the factor).
+    """
+    out = {}
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count start/op once
+        _, out_type, kind = m.groups()
+        # tuple outputs: sum all leaf types on the lhs
+        nbytes = type_bytes(out_type)
+        if out_type.startswith("("):
+            nbytes = sum(type_bytes(t) for t in TYPE_RE.findall(out_type))
+        ent = out.setdefault(kind, {"count": 0, "bytes": 0})
+        ent["count"] += 1
+        ent["bytes"] += nbytes
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               fsdp: bool = True, donate: bool = True,
+               analysis: bool = False):
+    """analysis=True re-lowers with scans UNROLLED so cost_analysis and the
+    collective schedule count every layer (XLA counts while-loop bodies
+    once); used for the roofline, single-pod only."""
+    spec = registry.ARCHS[arch]
+    cfg = spec.config
+    shape = ALL_SHAPES[shape_name]
+    skip = registry.shape_applicable(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name,
+                "multi_pod": multi_pod, "skipped": skip}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    moe_impl = make_spmd_moe(cfg, mesh) if cfg.moe_experts else None
+    t0 = time.time()
+
+    if shape.kind == "train":
+        opt = AdamW()
+        step = ts.make_train_step(cfg, opt, microbatches=spec.train_microbatches,
+                                  remat=True, moe_impl=moe_impl,
+                                  unroll=analysis)
+        state_sds = ts.train_state_specs(cfg, opt)
+        batch_sds = data_lib.batch_specs(cfg, shape.seq_len, shape.global_batch,
+                                         "train")
+        state_sh = sh.named(mesh, sh.train_state_pspecs(cfg, mesh, fsdp=fsdp))
+        batch_sh = sh.named(mesh, sh.batch_pspecs(cfg, mesh, batch_sds,
+                                                  shape.global_batch))
+        metrics_sh = {"loss": sh.named(mesh, jax.sharding.PartitionSpec()),
+                      "grad_norm": sh.named(mesh, jax.sharding.PartitionSpec()),
+                      "lr": sh.named(mesh, jax.sharding.PartitionSpec())}
+        jitted = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, metrics_sh),
+            donate_argnums=(0,) if donate else (),
+        )
+        with activation_sharding(mesh):
+            lowered = jitted.lower(state_sds, batch_sds)
+    else:
+        pdtype = jnp.dtype(cfg.dtype)  # serving keeps bf16 params
+        param_sds = Pm.param_specs(cfg, dtype=pdtype)
+        param_sh = sh.named(mesh, sh.param_pspecs(cfg, mesh, fsdp=False))
+        cache_sds = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+        cache_sh = sh.named(
+            mesh, sh.cache_pspecs(cfg, mesh, cache_sds, shape.global_batch))
+        P = jax.sharding.PartitionSpec
+        if shape.kind == "prefill":
+            step = serve.make_prefill_step(cfg, moe_impl=moe_impl,
+                                           unroll=analysis)
+            batch_sds = data_lib.batch_specs(cfg, shape.seq_len,
+                                             shape.global_batch, "prefill")
+            batch_sh = sh.named(mesh, sh.batch_pspecs(cfg, mesh, batch_sds,
+                                                      shape.global_batch))
+            dpa = sh.dp_axes(mesh)
+            ok = shape.global_batch % sh.axis_size(mesh, dpa) == 0
+            vok = cfg.vocab % mesh.shape["model"] == 0
+            logits_sh = sh.named(
+                mesh, P(dpa if ok else None, "model" if vok else None))
+            jitted = jax.jit(step, in_shardings=(param_sh, batch_sh, cache_sh),
+                             out_shardings=(logits_sh, cache_sh),
+                             donate_argnums=(2,) if donate else ())
+            with activation_sharding(mesh):
+                lowered = jitted.lower(param_sds, batch_sds, cache_sds)
+        elif shape.kind == "decode":
+            step = serve.make_decode_step(cfg, moe_impl=moe_impl,
+                                          unroll=analysis)
+            b = shape.global_batch
+            tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+            dpa = sh.dp_axes(mesh)
+            ok = b % sh.axis_size(mesh, dpa) == 0
+            tok_sh = sh.named(mesh, P(dpa if ok else None, None))
+            pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            rng_sds = jax.ShapeDtypeStruct((2,), jnp.uint32)
+            repl = sh.named(mesh, P())
+            vok = cfg.vocab % mesh.shape["model"] == 0
+            logits_sh = sh.named(
+                mesh, P(dpa if ok else None, "model" if vok else None))
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, cache_sh, tok_sh, repl, repl),
+                out_shardings=(tok_sh, logits_sh, cache_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            with activation_sharding(mesh):
+                lowered = jitted.lower(param_sds, cache_sds, tok_sds, pos_sds,
+                                       rng_sds)
+        else:
+            raise ValueError(shape.kind)
+
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    result = {
+        "arch": arch,
+        "shape": shape_name,
+        "multi_pod": multi_pod,
+        "analysis": analysis,
+        "mesh": dict(mesh.shape),
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "flops": float(cost.get("flops", -1)) if cost else -1,
+        "bytes_accessed": float(cost.get("bytes accessed", -1)) if cost else -1,
+        "collectives": coll,
+        "params": cfg.num_params(),
+        "active_params": cfg.active_params(),
+    }
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            result[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    return result
+
+
+def analyze_cell(arch: str, shape_name: str, fsdp: bool = True,
+                 microbatches: int = 1):
+    """Exact roofline counts via depth extrapolation: lower the model at
+    1 and 2 blocks with scans UNROLLED (XLA counts while bodies once), and
+    extend linearly to the full depth: total = f1 + (f2 - f1)*(NB - 1).
+    Single-pod, microbatches=1 (the roofline baseline; grad-accum scales
+    only the FSDP weight-gather term — discussed in EXPERIMENTS §Perf)."""
+    import dataclasses as dc
+
+    spec = registry.ARCHS[arch]
+    cfg_full = spec.config
+    shape = ALL_SHAPES[shape_name]
+    skip = registry.shape_applicable(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape_name, "analysis": True,
+                "multi_pod": False, "skipped": skip}
+
+    pat = len(cfg_full.block_pattern())
+    nb_full = cfg_full.n_blocks
+    sub = {}
+    for nb in (1, 2):
+        cfg = dc.replace(cfg_full, n_layers=pat * nb)
+        mesh = make_production_mesh(multi_pod=False)
+        moe_impl = make_spmd_moe(cfg, mesh) if cfg.moe_experts else None
+        if shape.kind == "train":
+            opt = AdamW()
+            step = ts.make_train_step(cfg, opt, microbatches=microbatches,
+                                      remat=True, moe_impl=moe_impl,
+                                      unroll=True)
+            state_sds = ts.train_state_specs(cfg, opt)
+            batch_sds = data_lib.batch_specs(cfg, shape.seq_len,
+                                             shape.global_batch, "train")
+            state_sh = sh.named(mesh, sh.train_state_pspecs(cfg, mesh,
+                                                            fsdp=fsdp))
+            batch_sh = sh.named(mesh, sh.batch_pspecs(cfg, mesh, batch_sds,
+                                                      shape.global_batch))
+            P = jax.sharding.PartitionSpec
+            msh = {k: sh.named(mesh, P()) for k in
+                   ("loss", "grad_norm", "lr")}
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             out_shardings=(state_sh, msh),
+                             donate_argnums=(0,))
+            with activation_sharding(mesh):
+                compiled = jitted.lower(state_sds, batch_sds).compile()
+        else:
+            pdtype = jnp.dtype(cfg.dtype)
+            param_sds = Pm.param_specs(cfg, dtype=pdtype)
+            param_sh = sh.named(mesh, sh.param_pspecs(cfg, mesh, fsdp=False))
+            cache_sds = M.cache_specs(cfg, shape.global_batch, shape.seq_len)
+            cache_sh = sh.named(mesh, sh.cache_pspecs(cfg, mesh, cache_sds,
+                                                      shape.global_batch))
+            P = jax.sharding.PartitionSpec
+            dpa = sh.dp_axes(mesh)
+            ok = shape.global_batch % sh.axis_size(mesh, dpa) == 0
+            vok = cfg.vocab % mesh.shape["model"] == 0
+            logits_sh = sh.named(
+                mesh, P(dpa if ok else None, "model" if vok else None))
+            if shape.kind == "prefill":
+                step = serve.make_prefill_step(cfg, moe_impl=moe_impl,
+                                               unroll=True)
+                batch_sds = data_lib.batch_specs(cfg, shape.seq_len,
+                                                 shape.global_batch,
+                                                 "prefill")
+                batch_sh = sh.named(mesh, sh.batch_pspecs(
+                    cfg, mesh, batch_sds, shape.global_batch))
+                jitted = jax.jit(step,
+                                 in_shardings=(param_sh, batch_sh, cache_sh),
+                                 out_shardings=(logits_sh, cache_sh),
+                                 donate_argnums=(2,))
+                with activation_sharding(mesh):
+                    compiled = jitted.lower(param_sds, batch_sds,
+                                            cache_sds).compile()
+            else:
+                step = serve.make_decode_step(cfg, moe_impl=moe_impl,
+                                              unroll=True)
+                b = shape.global_batch
+                tok_sds = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+                tok_sh = sh.named(mesh, P(dpa if ok else None, None))
+                repl = sh.named(mesh, P())
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(param_sh, cache_sh, tok_sh, repl, repl),
+                    out_shardings=(tok_sh, logits_sh, cache_sh),
+                    donate_argnums=(1,))
+                with activation_sharding(mesh):
+                    compiled = jitted.lower(
+                        param_sds, cache_sds, tok_sds,
+                        jax.ShapeDtypeStruct((), jnp.int32),
+                        jax.ShapeDtypeStruct((2,), jnp.uint32)).compile()
+        cost = compiled.cost_analysis()
+        sub[nb] = {
+            "flops": float(cost.get("flops", 0)),
+            "bytes": float(cost.get("bytes accessed", 0)),
+            "coll": collective_stats(compiled.as_text()),
+        }
+
+    def extrap(v1, v2):
+        # per-block delta clamped at 0 (XLA may optimize the 1-block
+        # program differently; never extrapolate negative)
+        return v1 + max(v2 - v1, 0) * (nb_full - 1)
+
+    coll = {}
+    kinds = set(sub[1]["coll"]) | set(sub[2]["coll"])
+    for k in kinds:
+        c1 = sub[1]["coll"].get(k, {"count": 0, "bytes": 0})
+        c2 = sub[2]["coll"].get(k, {"count": 0, "bytes": 0})
+        coll[k] = {"count": int(extrap(c1["count"], c2["count"])),
+                   "bytes": int(extrap(c1["bytes"], c2["bytes"]))}
+
+    return {
+        "arch": arch,
+        "shape": shape_name,
+        "analysis": True,
+        "multi_pod": False,
+        "mesh": {"data": 16, "model": 16},
+        "kind": shape.kind,
+        "flops": extrap(sub[1]["flops"], sub[2]["flops"]),
+        "bytes_accessed": extrap(sub[1]["bytes"], sub[2]["bytes"]),
+        "collectives": coll,
+        "params": cfg_full.num_params(),
+        "active_params": cfg_full.active_params(),
+        "depth_points": sub,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--analysis", action="store_true",
+                    help="unrolled-scan lowering for exact roofline counts")
+    ap.add_argument("--seq-parallel", action="store_true",
+                    help="sequence-parallel residual stream (optimized)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    if args.seq_parallel:
+        from repro.distributed import context as dctx
+        dctx.DEFAULT_SEQ_PARALLEL = True
+    if args.all:
+        meshes = ([False] if args.analysis
+                  else ([False, True] if args.both_meshes
+                        else [args.multi_pod]))
+        cells = [(a, s, mp)
+                 for a, shape, _ in registry.cells()
+                 for s in [shape.name]
+                 for mp in meshes]
+    else:
+        assert args.arch and args.shape
+        meshes = [False, True] if args.both_meshes else [args.multi_pod]
+        cells = [(args.arch, args.shape, mp) for mp in meshes]
+
+    failures = 0
+    for arch, shape, mp in cells:
+        tag = f"{arch}__{shape}__{'pod2' if mp else 'pod1'}"
+        if args.analysis:
+            tag += "__analysis"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {tag}")
+            continue
+        print(f"[lower+compile] {tag} ...", flush=True)
+        try:
+            if args.analysis:
+                res = analyze_cell(arch, shape, fsdp=not args.no_fsdp)
+            else:
+                res = lower_cell(arch, shape, mp, fsdp=not args.no_fsdp)
+            with open(path, "w") as f:
+                json.dump(res, f, indent=1)
+            if "skipped" in res:
+                print(f"  -> SKIP: {res['skipped']}")
+            else:
+                print(f"  -> ok: compile {res.get('compile_s', '-')}s, "
+                      f"flops {res['flops']:.3e}, "
+                      f"colls { {k: v['count'] for k, v in res['collectives'].items()} }")
+        except Exception as e:
+            failures += 1
+            print(f"  -> FAIL: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

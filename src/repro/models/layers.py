@@ -1,0 +1,236 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (full + sliding window +
+decode cache), dense MLP, MoE (sort-based capacity dispatch), Mamba2 SSD.
+
+All functions are shape-polymorphic over (B, S, ...) and have explicit
+single-token decode paths that are tested for equivalence against the
+full-sequence forward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w).astype(dt)
+
+
+def sinusoidal_pos(positions, dim, dtype):
+    """(S,) -> (S, dim) classic transformer sinusoids."""
+    half = dim // 2
+    freq = jnp.exp(-np.log(10_000.0) * jnp.arange(half) / half)
+    ang = positions[:, None].astype(jnp.float32) * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1).astype(dtype)
+
+
+def rope_tables(positions, rot_dim, theta):
+    """positions (..., S) -> cos/sin (..., S, rot_dim/2)."""
+    freq = theta ** (-jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, mode: str):
+    """x: (B, S, H, hd). mode 'standard' rotates all dims (half-split
+    layout); mode '2d' rotates only the first half of head dims
+    (partial rotary, ChatGLM-style)."""
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    rot = hd if mode == "standard" else hd // 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[:, :, None, :]
+    s = sin[:, :, None, :]
+    r1 = x1 * c - x2 * s
+    r2 = x2 * c + x1 * s
+    return jnp.concatenate([r1, r2, xp], axis=-1).astype(x.dtype)
+
+
+def _attn_scores_mask(q_pos, k_pos, window):
+    """(..., Sq, Sk) additive mask: causal + optional sliding window."""
+    ok = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] >= 0)
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    return jnp.where(ok, 0.0, NEG_INF)
+
+
+def attention(cfg: ModelConfig, lp, x, *, positions, cache=None,
+              cache_pos=None):
+    """GQA attention.
+
+    Train/prefill: cache=None or a cache dict to FILL (prefill).
+    Decode: x is (B, 1, d); cache holds k/v; cache_pos is the write index.
+    Returns (out, new_cache).
+    """
+    b, s, d = x.shape
+    hq, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = hq // hkv
+    dt = x.dtype
+
+    q = x @ lp["wq"]
+    k = x @ lp["wk"]
+    v = x @ lp["wv"]
+    if cfg.qkv_bias:
+        q = q + lp["bq"]
+        k = k + lp["bk"]
+        v = v + lp["bv"]
+    q = q.reshape(b, s, hq, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+
+    rot = hd if cfg.rope == "standard" else hd // 2
+    if cfg.rope != "none":
+        cos, sin = rope_tables(positions, rot, cfg.rope_theta)
+        cos, sin = cos[None], sin[None]  # (1, S, rot/2)
+        q = apply_rope(q, cos, sin, cfg.rope)
+        k = apply_rope(k, cos, sin, cfg.rope)
+
+    new_cache = None
+    if cache is not None and cache_pos is not None:
+        # decode: write this step's k/v into the (ring) cache
+        s_max = cache["k"].shape[1]
+        widx = cache_pos % s_max if cfg.attn_window > 0 else cache_pos
+        ck = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, widx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, widx, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k_full, v_full = ck, cv
+        if cfg.attn_window > 0:
+            k_pos = cache_pos - ((widx - jnp.arange(s_max)) % s_max)
+        else:
+            k_pos = jnp.arange(s_max)
+        q_pos = positions
+    elif cache is not None:
+        # prefill: fill cache positions [0, s)
+        s_max = cache["k"].shape[1]
+        if cfg.attn_window > 0 and s > s_max:
+            # ring invariant: position p lives at slot p % s_max
+            tail_k = jnp.roll(k[:, -s_max:], shift=s % s_max, axis=1)
+            tail_v = jnp.roll(v[:, -s_max:], shift=s % s_max, axis=1)
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], tail_k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], tail_v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+        new_cache = {"k": ck, "v": cv}
+        k_full, v_full = k, v
+        q_pos = positions
+        k_pos = positions
+    else:
+        k_full, v_full = k, v
+        q_pos = positions
+        k_pos = positions
+
+    # scores with GQA grouping: (b, hkv, g, sq, sk)
+    qg = q.reshape(b, s, hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k_full.astype(jnp.float32))
+    scores = scores / np.sqrt(hd)
+    mask = _attn_scores_mask(q_pos, k_pos, cfg.attn_window)
+    scores = scores + mask[None, None, None]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                     v_full.astype(jnp.float32)).astype(dt)
+    out = out.reshape(b, s, hq * hd)
+    return out @ lp["wo"], new_cache
+
+
+def dense_mlp(cfg: ModelConfig, w1, w2, w3, x):
+    h = x @ w1
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ w3)
+    else:
+        h = jax.nn.gelu(h)
+    return h @ w2
+
+
+def moe_local(cfg: ModelConfig, lp, x, *, expert_lo=0, n_local_experts=None,
+              prefix="moe_"):
+    """Sort-based capacity MoE over LOCAL tokens and LOCAL experts.
+
+    x: (T, d) tokens. Expert params lp[prefix+"w1"...] hold the local slice
+    (E_loc, d, ff_loc). Under SPMD this runs inside shard_map with tokens
+    sharded over (pod, data) and experts (EP) or ff (expert-TP) sharded
+    over model; the caller psums the result over the model axis. This is
+    the request-respond channel pattern: dedup/sort by destination expert,
+    capacity-bounded positional buffers, replies combined by weight.
+    """
+    t, d = x.shape
+    e = cfg.moe_experts
+    k = cfg.moe_top_k
+    w1 = lp[prefix + "w1"]
+    e_loc = n_local_experts if n_local_experts is not None else w1.shape[0]
+    if t <= e:
+        cap = t  # decode-sized batches: never drop (cap=t is collision-free)
+    else:
+        cap = max(int(np.ceil(t * k / e * cfg.capacity_factor)), 1)
+
+    logits = (x @ lp["router"]).astype(jnp.float32)  # (T, E)
+    topv, topi = jax.lax.top_k(logits, k)
+    weights = jax.nn.softmax(topv, axis=-1)  # normalize over the top-k
+
+    flat_e = topi.reshape(t * k)
+    flat_w = weights.reshape(t * k)
+    tok = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+
+    mine = (flat_e >= expert_lo) & (flat_e < expert_lo + e_loc)
+    e_rel = jnp.where(mine, flat_e - expert_lo, e_loc)
+    order = jnp.argsort(e_rel)
+    se = e_rel[order]
+    stok = tok[order]
+    sw = flat_w[order]
+    starts = jnp.searchsorted(se, jnp.arange(e_loc + 1, dtype=jnp.int32))
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[jnp.clip(se, 0, e_loc)]
+    fits = (se < e_loc) & (rank < cap)
+    slot = jnp.where(fits, se * cap + rank, e_loc * cap)
+
+    buf = jnp.zeros((e_loc * cap + 1, d), x.dtype)
+    buf = buf.at[slot].set(x[stok], mode="drop")[:-1]
+    buf = buf.reshape(e_loc, cap, d)
+
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", buf, lp[prefix + "w3"])
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, lp[prefix + "w2"])
+
+    out_flat = out_buf.reshape(e_loc * cap, d)
+    out_flat = jnp.concatenate([out_flat, jnp.zeros((1, d), x.dtype)], 0)
+    contrib = out_flat[slot] * sw[:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[stok].add(
+        jnp.where(fits[:, None], contrib, 0), mode="drop"
+    )
+    return y
+
+
+def moe_layer(cfg: ModelConfig, lp, x):
+    """MoE over (B, S, d) — local (single-shard) form. The SPMD dry-run
+    wraps `moe_local` in shard_map instead (see distributed.moe_spmd)."""
+    b, s, d = x.shape
+    y = moe_local(cfg, lp, x.reshape(b * s, d))
+    y = y.reshape(b, s, d)
+    if cfg.moe_shared_ff:
+        shared = dense_mlp(
+            cfg, lp["shared_w1"], lp["shared_w2"], lp.get("shared_w3"), x
+        )
+        gate = jax.nn.sigmoid((x @ lp["shared_gate"]).astype(jnp.float32))
+        y = y + shared * gate.astype(x.dtype)
+    return y

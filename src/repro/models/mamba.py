@@ -1,0 +1,180 @@
+"""Mamba2 / SSD (state-space duality) mixer — chunked matmul formulation.
+
+The chunked form is the TPU-native adaptation: within-chunk work is dense
+matmuls (MXU) and only the small per-head (P x N) states recur across
+chunks (a lax.scan of length S/chunk). The single-token decode path is the
+exact SSM recurrence and is tested for equivalence against the chunked
+full-sequence forward.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _segsum(a):
+    """a: (..., L). Returns (..., L, L) with out[i,j] = sum_{j<k<=i} a[k]
+    for j < i, 0 on diagonal, -inf above."""
+    l = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    lo = jnp.tril(jnp.ones((l, l), bool), k=0)
+    return jnp.where(lo, diff, -jnp.inf)
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv. x (B,S,C), w (K,C). state: (B,K-1,C) past
+    inputs for decode continuation. Returns (y, new_state)."""
+    b, s, c = x.shape
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((b, k - 1, c), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S+K-1, C)
+    y = jnp.zeros((b, s, c), jnp.float32)
+    for i in range(k):
+        y = y + xp[:, i : i + s].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros((b, 0, c), x.dtype)
+    return jax.nn.silu(y).astype(x.dtype), new_state
+
+
+def ssd_chunked(x, dt, a, b_mat, c_mat, chunk: int, init_state=None):
+    """SSD scan.
+
+    x:  (B, S, H, P)   inputs per head
+    dt: (B, S, H)      discretization (post-softplus)
+    a:  (H,)           negative decay rates (=-exp(A_log))
+    b_mat, c_mat: (B, S, N)  shared across heads (1 group)
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+    bc = b_mat.reshape(bsz, nc, chunk, n)
+    cc = c_mat.reshape(bsz, nc, chunk, n)
+
+    da = dtc * a[None, None, None, :]            # (B,C,L,H)
+    da_cum = jnp.cumsum(da, axis=2)              # (B,C,L,H)
+    # intra-chunk: Y_diag = (C B^T * L) (dt x)
+    ldec = jnp.exp(_segsum(jnp.moveaxis(da, -1, 2)))  # (B,C,H,L,L)
+    cb = jnp.einsum("bcln,bcmn->bclm", cc, bc)        # (B,C,L,L)
+    dtx = xc * dtc[..., None]                         # (B,C,L,H,P)
+    y_diag = jnp.einsum("bclm,bchlm,bcmhp->bclhp", cb, ldec, dtx)
+
+    # chunk states: contribution of each chunk to its end-state
+    decay_to_end = jnp.exp(da_cum[:, :, -1:, :] - da_cum)  # (B,C,L,H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", bc, decay_to_end, dtx)
+
+    # recur across chunks
+    chunk_decay = jnp.exp(da_cum[:, :, -1, :])  # (B,C,H)
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    def scan_fn(prev, inp):
+        st, dec = inp  # (B,H,P,N), (B,H)
+        new = st + prev * dec[..., None, None]
+        return new, prev  # emit the state ENTERING this chunk
+
+    final, entering = jax.lax.scan(
+        scan_fn,
+        init_state.astype(jnp.float32),
+        (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    entering = jnp.moveaxis(entering, 0, 1)  # (B,C,H,P,N)
+
+    # inter-chunk: Y_off = C . (decay-from-start * entering_state)
+    state_decay = jnp.exp(da_cum)  # (B,C,L,H)
+    y_off = jnp.einsum("bcln,bclh,bchpn->bclhp", cc, state_decay, entering)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def mamba_forward(cfg: ModelConfig, lp, x, *, cache=None, chunk: int = 128):
+    """Full-sequence (train/prefill) Mamba2 block. Returns (y, new_cache)."""
+    b, s, d = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x @ lp["wz"]
+    xin = x @ lp["wx"]
+    bproj = x @ lp["wb"]
+    cproj = x @ lp["wc"]
+    dt = jax.nn.softplus((x @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+
+    xin, conv_x_state = _causal_conv(xin, lp["conv_x"])
+    bproj, conv_b_state = _causal_conv(bproj, lp["conv_b"])
+    cproj, conv_c_state = _causal_conv(cproj, lp["conv_c"])
+
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))
+    pad = (-s) % chunk
+    if pad:
+        padf = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        xin_p, dt_p, b_p, c_p = map(padf, (xin, dt, bproj, cproj))
+    else:
+        xin_p, dt_p, b_p, c_p = xin, dt, bproj, cproj
+
+    y, final_state = ssd_chunked(
+        xin_p.reshape(b, s + pad, h, p),
+        dt_p.astype(jnp.float32),
+        a,
+        b_p.astype(jnp.float32),
+        c_p.astype(jnp.float32),
+        chunk,
+    )
+    y = y[:, :s].reshape(b, s, h * p)
+    y = y + xin * jnp.repeat(lp["D"], p)[None, None, :]
+    # gated RMSNorm (mamba2)
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf * lp["ssm_norm"]).astype(x.dtype)
+    out = y @ lp["out_proj"]
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "ssm": final_state.astype(jnp.float32),
+            "conv_x": conv_x_state,
+            "conv_b": conv_b_state,
+            "conv_c": conv_c_state,
+        }
+    return out, new_cache
+
+
+def mamba_decode(cfg: ModelConfig, lp, x, cache):
+    """Single-token recurrence. x: (B, 1, d). Returns (y, new_cache)."""
+    b, _, d = x.shape
+    h, p, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+
+    z = x @ lp["wz"]
+    xin = x @ lp["wx"]
+    bproj = x @ lp["wb"]
+    cproj = x @ lp["wc"]
+    dt = jax.nn.softplus((x @ lp["wdt"]).astype(jnp.float32) + lp["dt_bias"])
+
+    xin, cx = _causal_conv(xin, lp["conv_x"], cache["conv_x"])
+    bproj, cb_ = _causal_conv(bproj, lp["conv_b"], cache["conv_b"])
+    cproj, cc_ = _causal_conv(cproj, lp["conv_c"], cache["conv_c"])
+
+    a = -jnp.exp(lp["A_log"].astype(jnp.float32))  # (H,)
+    da = dt[:, 0] * a[None, :]                      # (B,H)
+    xh = xin[:, 0].reshape(b, h, p).astype(jnp.float32)
+    bv = bproj[:, 0].astype(jnp.float32)            # (B,N)
+    cv = cproj[:, 0].astype(jnp.float32)
+    dtx = xh * dt[:, 0, :, None]                    # (B,H,P)
+    st = cache["ssm"] * jnp.exp(da)[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", dtx, bv
+    )
+    y = jnp.einsum("bhpn,bn->bhp", st, cv).reshape(b, 1, h * p).astype(x.dtype)
+    y = y + xin * jnp.repeat(lp["D"], p)[None, None, :]
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    yf = yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+    y = (yf * lp["ssm_norm"]).astype(x.dtype)
+    out = y @ lp["out_proj"]
+    return out, {"ssm": st, "conv_x": cx, "conv_b": cb_, "conv_c": cc_}

@@ -1,0 +1,150 @@
+"""The decoder stack: scan-over-blocks forward with train / prefill /
+decode modes, frontend stubs, and pluggable MoE implementation (the SPMD
+dry-run injects the shard_map channel version)."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain, residual_spec
+from repro.models import layers, mamba
+from repro.models.config import ModelConfig
+
+
+def compute_dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _cast_params(params, dtype):
+    """Cast matmul weights to the compute dtype; keep vectors in fp32."""
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dtype) if a.ndim >= 2 else a, params
+    )
+
+
+def init_cache(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    """Decode cache pytree; leaves stacked over blocks."""
+    dtype = dtype or compute_dtype(cfg)
+    nb = cfg.n_blocks
+    h, p, n = cfg.ssm_heads, cfg.ssm_state and cfg.ssm_head_dim, cfg.ssm_state
+    caches = {}
+    for li, (mixer, _) in enumerate(cfg.block_pattern()):
+        if mixer == "attn":
+            s_kv = min(s_max, cfg.attn_window) if cfg.attn_window else s_max
+            caches[f"l{li}"] = {
+                "k": jnp.zeros((nb, batch, s_kv, cfg.n_kv_heads, cfg.hd), dtype),
+                "v": jnp.zeros((nb, batch, s_kv, cfg.n_kv_heads, cfg.hd), dtype),
+            }
+        else:
+            kc = cfg.ssm_conv - 1
+            caches[f"l{li}"] = {
+                "ssm": jnp.zeros(
+                    (nb, batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                    jnp.float32,
+                ),
+                "conv_x": jnp.zeros((nb, batch, kc, cfg.d_inner), dtype),
+                "conv_b": jnp.zeros((nb, batch, kc, cfg.ssm_state), dtype),
+                "conv_c": jnp.zeros((nb, batch, kc, cfg.ssm_state), dtype),
+            }
+    return caches
+
+
+def cache_specs(cfg: ModelConfig, batch: int, s_max: int, dtype=None):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, s_max, dtype))
+
+
+def embed_input(cfg: ModelConfig, params, batch: Dict[str, Any], dtype):
+    """Token embedding + frontend-stub embeddings (precomputed, per spec)."""
+    parts = []
+    if "embeds" in batch and batch["embeds"] is not None:
+        parts.append(batch["embeds"].astype(dtype))
+    if "tokens" in batch and batch["tokens"] is not None:
+        emb = params["embed"].astype(dtype)
+        parts.append(emb[batch["tokens"]])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    if cfg.pos_embed == "sinusoidal":
+        pos = jnp.arange(x.shape[1])
+        x = x + layers.sinusoidal_pos(pos, cfg.d_model, dtype)[None]
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: Dict[str, Any],
+    *,
+    cache=None,
+    cache_pos=None,
+    remat: bool = False,
+    moe_impl: Optional[Callable] = None,
+    logits_f32: bool = True,
+    unroll: bool = False,
+):
+    """Returns (logits (B,S,V), new_cache_or_None).
+
+    Modes: train (cache=None), prefill (cache given, cache_pos=None),
+    decode (cache + cache_pos given; batch carries 1 token).
+    """
+    dt = compute_dtype(cfg)
+    p = _cast_params(params, dt)
+    moe_fn = moe_impl or layers.moe_layer
+    pattern = cfg.block_pattern()
+    decode = cache_pos is not None
+
+    x = embed_input(cfg, p, batch, dt)
+    res_spec = ("dp", None, None) if decode else residual_spec()
+    x = constrain(x, *res_spec)
+    b, s, d = x.shape
+    if decode:
+        positions = jnp.reshape(cache_pos, (1,))
+    else:
+        positions = jnp.arange(s)
+
+    def block_fn(x, bp_bc):
+        bp, bc = bp_bc
+        new_bc = {} if bc is not None else None
+        for li, (mixer, mlp) in enumerate(pattern):
+            lp = bp[f"l{li}"]
+            lc = bc[f"l{li}"] if bc is not None else None
+            h = layers.rms_norm(x, lp["norm_mixer"], cfg.norm_eps)
+            if mixer == "attn":
+                y, nc = layers.attention(
+                    cfg, lp, h, positions=positions, cache=lc,
+                    cache_pos=cache_pos,
+                )
+            else:
+                if decode:
+                    y, nc = mamba.mamba_decode(cfg, lp, h, lc)
+                else:
+                    y, nc = mamba.mamba_forward(cfg, lp, h, cache=lc)
+            x = x + y
+            if mlp != "none":
+                h2 = layers.rms_norm(x, lp["norm_mlp"], cfg.norm_eps)
+                if mlp == "dense":
+                    y2 = layers.dense_mlp(cfg, lp["w1"], lp["w2"],
+                                          lp.get("w3"), h2)
+                else:
+                    y2 = moe_fn(cfg, lp, h2)
+                x = x + y2
+            if new_bc is not None:
+                new_bc[f"l{li}"] = nc
+        x = constrain(x, *res_spec)
+        return x, new_bc
+
+    f = jax.checkpoint(block_fn) if remat else block_fn
+    x, new_cache = jax.lax.scan(
+        f, x, (p["blocks"], cache),
+        unroll=cfg.n_blocks if unroll else 1,
+    )
+
+    x = layers.rms_norm(x, p["final_norm"], cfg.norm_eps)
+    head = (p["embed"].T if cfg.tie_embeddings else p["lm_head"]).astype(dt)
+    logits = x @ head
+    if logits_f32:
+        logits = logits.astype(jnp.float32)
+    # keep logits vocab-sharded through the loss/sampling (no (B,S,V) gather)
+    logits = constrain(logits, "dp", None, "tp")
+    return logits, new_cache

@@ -1,0 +1,177 @@
+"""Parameter tree builder.
+
+One builder, three uses (same structure guaranteed):
+  - init:  make() returns initialized jnp arrays;
+  - specs: make() returns ShapeDtypeStruct (for jax.eval_shape / dry-run);
+  - axes:  make() returns the logical-axis tuple (for the sharding policy).
+
+Logical axes (mapped to mesh axes by repro.distributed.sharding):
+  "fsdp"    — weight dim sharded over the data(+pod) axes (ZeRO-3 style)
+  "tp"      — weight dim sharded over the model axis (tensor parallel)
+  "ep"      — expert dim sharded over the model axis (expert parallel)
+  None      — replicated
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+
+def _normal(key, shape, dtype, scale):
+    return (scale * jax.random.normal(key, shape)).astype(dtype)
+
+
+def build(cfg: ModelConfig, make: Callable):
+    """make(path: str, shape: tuple, axes: tuple, init: str) -> leaf."""
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    p = {}
+    p["embed"] = make("embed", (cfg.vocab, d), ("tp", "fsdp"), "embed")
+    if not cfg.tie_embeddings:
+        p["lm_head"] = make("lm_head", (d, cfg.vocab), ("fsdp", "tp"), "proj_in")
+    p["final_norm"] = make("final_norm", (d,), (None,), "one")
+
+    pattern = cfg.block_pattern()
+    layers = {}
+    for li, (mixer, mlp) in enumerate(pattern):
+        lp = {}
+        lp["norm_mixer"] = make(f"b{li}.norm_mixer", (cfg.n_blocks, d),
+                                (None, None), "one")
+        if mixer == "attn":
+            lp["wq"] = make(f"b{li}.wq", (cfg.n_blocks, d, hq * hd),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["wk"] = make(f"b{li}.wk", (cfg.n_blocks, d, hkv * hd),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["wv"] = make(f"b{li}.wv", (cfg.n_blocks, d, hkv * hd),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["wo"] = make(f"b{li}.wo", (cfg.n_blocks, hq * hd, d),
+                            (None, "tp", "fsdp"), "proj_out")
+            if cfg.qkv_bias:
+                lp["bq"] = make(f"b{li}.bq", (cfg.n_blocks, hq * hd),
+                                (None, "tp"), "zero")
+                lp["bk"] = make(f"b{li}.bk", (cfg.n_blocks, hkv * hd),
+                                (None, "tp"), "zero")
+                lp["bv"] = make(f"b{li}.bv", (cfg.n_blocks, hkv * hd),
+                                (None, "tp"), "zero")
+        elif mixer == "mamba":
+            din, n, h = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+            lp["wz"] = make(f"b{li}.wz", (cfg.n_blocks, d, din),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["wx"] = make(f"b{li}.wx", (cfg.n_blocks, d, din),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["wb"] = make(f"b{li}.wb", (cfg.n_blocks, d, n),
+                            (None, "fsdp", None), "proj_in")
+            lp["wc"] = make(f"b{li}.wc", (cfg.n_blocks, d, n),
+                            (None, "fsdp", None), "proj_in")
+            lp["wdt"] = make(f"b{li}.wdt", (cfg.n_blocks, d, h),
+                             (None, "fsdp", None), "proj_in")
+            lp["dt_bias"] = make(f"b{li}.dt_bias", (cfg.n_blocks, h),
+                                 (None, None), "dt_bias")
+            lp["conv_x"] = make(f"b{li}.conv_x", (cfg.n_blocks, cfg.ssm_conv, din),
+                                (None, None, "tp"), "conv")
+            lp["conv_b"] = make(f"b{li}.conv_b", (cfg.n_blocks, cfg.ssm_conv, n),
+                                (None, None, None), "conv")
+            lp["conv_c"] = make(f"b{li}.conv_c", (cfg.n_blocks, cfg.ssm_conv, n),
+                                (None, None, None), "conv")
+            lp["A_log"] = make(f"b{li}.A_log", (cfg.n_blocks, h),
+                               (None, None), "a_log")
+            lp["D"] = make(f"b{li}.D", (cfg.n_blocks, h), (None, None), "one")
+            lp["ssm_norm"] = make(f"b{li}.ssm_norm", (cfg.n_blocks, din),
+                                  (None, "tp"), "one")
+            lp["out_proj"] = make(f"b{li}.out_proj", (cfg.n_blocks, din, d),
+                                  (None, "tp", "fsdp"), "proj_out")
+        if mlp == "dense":
+            ff = cfg.d_ff
+            lp["norm_mlp"] = make(f"b{li}.norm_mlp", (cfg.n_blocks, d),
+                                  (None, None), "one")
+            lp["w1"] = make(f"b{li}.w1", (cfg.n_blocks, d, ff),
+                            (None, "fsdp", "tp"), "proj_in")
+            lp["w2"] = make(f"b{li}.w2", (cfg.n_blocks, ff, d),
+                            (None, "tp", "fsdp"), "proj_out")
+            if cfg.activation == "swiglu":
+                lp["w3"] = make(f"b{li}.w3", (cfg.n_blocks, d, ff),
+                                (None, "fsdp", "tp"), "proj_in")
+        elif mlp == "moe":
+            e, ff = cfg.moe_experts, cfg.moe_ff
+            lp["norm_mlp"] = make(f"b{li}.norm_mlp", (cfg.n_blocks, d),
+                                  (None, None), "one")
+            lp["router"] = make(f"b{li}.router", (cfg.n_blocks, d, e),
+                                (None, "fsdp", None), "proj_in")
+            # EP when E divides the model-axis size; else TP inside experts.
+            lp["moe_w1"] = make(f"b{li}.moe_w1", (cfg.n_blocks, e, d, ff),
+                                (None, "ep", "fsdp", "etp"), "proj_in")
+            lp["moe_w2"] = make(f"b{li}.moe_w2", (cfg.n_blocks, e, ff, d),
+                                (None, "ep", "etp", "fsdp"), "proj_out")
+            if cfg.activation == "swiglu":
+                lp["moe_w3"] = make(f"b{li}.moe_w3", (cfg.n_blocks, e, d, ff),
+                                    (None, "ep", "fsdp", "etp"), "proj_in")
+            if cfg.moe_shared_ff:
+                sff = cfg.moe_shared_ff
+                lp["shared_w1"] = make(f"b{li}.shared_w1", (cfg.n_blocks, d, sff),
+                                       (None, "fsdp", "tp"), "proj_in")
+                lp["shared_w2"] = make(f"b{li}.shared_w2", (cfg.n_blocks, sff, d),
+                                       (None, "tp", "fsdp"), "proj_out")
+                if cfg.activation == "swiglu":
+                    lp["shared_w3"] = make(
+                        f"b{li}.shared_w3", (cfg.n_blocks, d, sff),
+                        (None, "fsdp", "tp"), "proj_in")
+                lp["shared_gate"] = make(f"b{li}.shared_gate",
+                                         (cfg.n_blocks, d, 1),
+                                         (None, "fsdp", None), "proj_in")
+        layers[f"l{li}"] = lp
+    p["blocks"] = layers
+    return p
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.float32):
+    """Random-init parameters (fp32 master by default)."""
+    d = cfg.d_model
+    counter = [0]
+
+    def make(path, shape, axes, init):
+        counter[0] += 1
+        k = jax.random.fold_in(key, counter[0])
+        if init == "zero":
+            return jnp.zeros(shape, dtype)
+        if init == "one":
+            return jnp.ones(shape, dtype)
+        if init == "embed":
+            return _normal(k, shape, dtype, 0.02)
+        if init == "proj_in":
+            return _normal(k, shape, dtype, (1.0 / np.sqrt(shape[-2])))
+        if init == "proj_out":
+            return _normal(
+                k, shape, dtype,
+                1.0 / np.sqrt(shape[-2]) / np.sqrt(2.0 * cfg.n_layers),
+            )
+        if init == "conv":
+            return _normal(k, shape, dtype, 0.02)
+        if init == "a_log":
+            # A in [1, 16) => A_log = log(A)
+            u = jax.random.uniform(k, shape, minval=1.0, maxval=16.0)
+            return jnp.log(u).astype(dtype)
+        if init == "dt_bias":
+            # dt in [1e-3, 1e-1] through softplus
+            u = jax.random.uniform(k, shape, minval=np.log(1e-3), maxval=np.log(1e-1))
+            dt = jnp.exp(u)
+            return (dt + jnp.log(-jnp.expm1(-dt))).astype(dtype)
+        raise ValueError(init)
+
+    return build(cfg, make)
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (no allocation — for the dry-run)."""
+    return build(cfg, lambda path, shape, axes, init:
+                 jax.ShapeDtypeStruct(shape, dtype))
+
+
+def param_axes(cfg: ModelConfig):
+    """Tree of logical-axis tuples matching the param tree."""
+    return build(cfg, lambda path, shape, axes, init: axes)

@@ -1,0 +1,61 @@
+"""Serving: prefill + decode steps and a batched generation loop."""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, moe_impl: Optional[Callable] = None,
+                      unroll: bool = False):
+    def prefill_step(params, batch, cache):
+        logits, cache = M.forward(cfg, params, batch, cache=cache,
+                                  moe_impl=moe_impl, unroll=unroll)
+        return logits[:, -1], cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, moe_impl: Optional[Callable] = None,
+                     temperature: float = 0.0, unroll: bool = False):
+    def decode_step(params, cache, tokens, pos, rng):
+        """tokens (B,1) -> (next (B,1), logits (B,V), new cache)."""
+        logits, cache = M.forward(
+            cfg, params, {"tokens": tokens}, cache=cache, cache_pos=pos,
+            moe_impl=moe_impl, unroll=unroll,
+        )
+        last = logits[:, -1]
+        if temperature > 0:
+            nxt = jax.random.categorical(rng, last / temperature)
+        else:
+            nxt = jnp.argmax(last, axis=-1)
+        return nxt[:, None].astype(jnp.int32), last, cache
+    return decode_step
+
+
+def generate(cfg: ModelConfig, params, prompts, max_new: int,
+             temperature: float = 0.0, seed: int = 0,
+             moe_impl: Optional[Callable] = None):
+    """Greedy/sampled generation for a (B, S) prompt batch."""
+    b, s = prompts.shape
+    cache = M.init_cache(cfg, b, s + max_new)
+    prefill = jax.jit(make_prefill_step(cfg, moe_impl))
+    decode = jax.jit(make_decode_step(cfg, moe_impl, temperature))
+    last, cache = prefill(params, {"tokens": prompts}, cache)
+    if temperature > 0:
+        tok = jax.random.categorical(
+            jax.random.PRNGKey(seed), last / temperature)[:, None]
+    else:
+        tok = jnp.argmax(last, axis=-1)[:, None]
+    tok = tok.astype(jnp.int32)
+    out = [tok]
+    rng = jax.random.PRNGKey(seed + 1)
+    for i in range(max_new - 1):
+        rng, sub = jax.random.split(rng)
+        tok, _, cache = decode(params, cache, tok, jnp.asarray(s + i), sub)
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

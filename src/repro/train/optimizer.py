@@ -1,0 +1,81 @@
+"""AdamW with optional gradient clipping and bf16 second-moment storage
+(a distributed-memory trick: m in fp32, v in bf16 halves optimizer HBM for
+<0.1% quality impact — selectable per config)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any  # first moment (params-shaped)
+    v: Any  # second moment (params-shaped)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    v_dtype: Optional[str] = None  # e.g. "bfloat16" to halve v memory
+
+    def init(self, params) -> AdamWState:
+        vdt = jnp.dtype(self.v_dtype) if self.v_dtype else None
+        zeros = lambda p: jnp.zeros_like(p)
+        zeros_v = lambda p: jnp.zeros_like(p, dtype=vdt or p.dtype)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros_v, params),
+        )
+
+    def schedule(self, step):
+        warm = jnp.minimum(step.astype(jnp.float32) / max(self.warmup_steps, 1), 1.0)
+        return self.lr * warm
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+
+        if self.grad_clip > 0:
+            gnorm = jnp.sqrt(
+                sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                    for g in jax.tree_util.tree_leaves(grads))
+            )
+            scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.float32(0)
+
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = m.astype(jnp.float32) * b1 + g * (1 - b1)
+            vf = v.astype(jnp.float32) * b2 + g * g * (1 - b2)
+            mhat = mf / bc1
+            vhat = vf / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, mf.astype(m.dtype), vf.astype(v.dtype)
+
+        out = jax.tree_util.tree_map(upd, params, grads, state.m, state.v)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree_util.tree_map(lambda t: t[1], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[2], out,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm

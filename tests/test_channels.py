@@ -1,0 +1,157 @@
+"""Channel-level correctness: routing, request-respond, combined message,
+aggregator — vs brute-force numpy delivery, including hypothesis property
+tests over random message sets."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregator as agg
+from repro.core import message as msg
+from repro.core import request_respond as rr
+from repro.core.channel import ChannelContext
+
+W, N_LOC = 4, 16
+AXIS = "w"
+
+
+def run_sharded(fn, *args):
+    """vmap a per-shard fn with the worker axis name."""
+    return jax.vmap(fn, axis_name=AXIS)(*args)
+
+
+def make_ctx():
+    return ChannelContext(AXIS, W, N_LOC)
+
+
+def np_deliver(dst, valid, vals):
+    """Brute-force: for each worker, list of (dst, val) delivered to it."""
+    out = [[] for _ in range(W)]
+    for w in range(W):
+        for i in range(dst.shape[1]):
+            if valid[w, i]:
+                owner = dst[w, i] // N_LOC
+                out[owner].append((dst[w, i] % N_LOC, vals[w, i]))
+    return out
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 40))
+def test_combined_send_matches_bruteforce(seed, m):
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, W * N_LOC, (W, m)).astype(np.int32)
+    valid = rng.random((W, m)) < 0.7
+    vals = rng.normal(size=(W, m)).astype(np.float32)
+
+    def shard(d, v, x):
+        ctx = make_ctx()
+        out, got, ovf = msg.combined_send(ctx, d, v, x, "sum", capacity=m)
+        return out, got, ovf
+
+    out, got, ovf = run_sharded(shard, jnp.array(dst), jnp.array(valid),
+                                jnp.array(vals))
+    assert not bool(np.asarray(ovf).any())
+    expect = np.zeros((W, N_LOC), np.float64)
+    expect_got = np.zeros((W, N_LOC), bool)
+    for w, deliv in enumerate(np_deliver(dst, valid, vals)):
+        for lidx, v in deliv:
+            expect[w, lidx] += v
+            expect_got[w, lidx] = True
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(got), expect_got)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_request_respond_matches_gather(seed):
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, W * N_LOC, (W, N_LOC)).astype(np.int32)
+    valid = rng.random((W, N_LOC)) < 0.8
+    attr = rng.normal(size=(W, N_LOC)).astype(np.float32)
+
+    def shard(d, v, a):
+        ctx = make_ctx()
+        out, ovf = rr.request(ctx, d, v, a, capacity=N_LOC)
+        return out, ovf
+
+    out, ovf = run_sharded(shard, jnp.array(dst), jnp.array(valid),
+                           jnp.array(attr))
+    assert not bool(np.asarray(ovf).any())
+    flat_attr = attr.reshape(-1)
+    expect = np.where(valid, flat_attr[dst], 0.0)
+    np.testing.assert_allclose(np.asarray(out), expect, rtol=1e-5)
+
+
+def test_request_respond_dedup_traffic():
+    """All requests to ONE vertex => exactly one remote request per worker."""
+    dst = np.full((W, N_LOC), 0, np.int32)  # everyone asks vertex 0 (worker 0)
+    valid = np.ones((W, N_LOC), bool)
+    attr = np.arange(W * N_LOC, dtype=np.float32).reshape(W, N_LOC)
+
+    def shard(d, v, a):
+        ctx = make_ctx()
+        out, _ = rr.request(ctx, d, v, a, capacity=N_LOC)
+        return out, ctx.stats_msgs["request_respond/request"]
+
+    out, nreq = run_sharded(shard, jnp.array(dst), jnp.array(valid),
+                            jnp.array(attr))
+    # workers 1..3 send exactly 1 deduped request each; worker 0 sends 0
+    np.testing.assert_array_equal(np.sort(np.asarray(nreq)), [0, 1, 1, 1])
+    np.testing.assert_allclose(np.asarray(out), np.full((W, N_LOC), attr[0, 0]))
+
+
+def test_direct_send_capacity_overflow_flag():
+    dst = np.zeros((W, 8), np.int32)  # everything to vertex 0
+    valid = np.ones((W, 8), bool)
+
+    def shard(d, v):
+        ctx = make_ctx()
+        deliv = msg.direct_send(ctx, d, v, {"x": jnp.zeros(8)}, capacity=4)
+        return deliv.overflow
+
+    ovf = run_sharded(shard, jnp.array(dst), jnp.array(valid))
+    assert bool(np.asarray(ovf).any())
+
+
+@pytest.mark.parametrize("comb,expect", [
+    ("sum", 8 * W), ("min", 1.0), ("max", 2.0),
+])
+def test_aggregator(comb, expect):
+    vals = np.full((W, N_LOC), 1.0, np.float32)
+    vals[:, 0] = 2.0  # sum rows: 2 + 15*... make simple: mask half
+    valid = np.zeros((W, N_LOC), bool)
+    valid[:, :8] = True
+    vals[:, 1:] = 1.0
+
+    def shard(x, v):
+        ctx = make_ctx()
+        return agg.aggregate(ctx, x, comb, valid=v)
+
+    out = run_sharded(jax.jit(shard), jnp.array(vals), jnp.array(valid))
+    # masked: per worker 8 valid entries: one 2.0 and seven 1.0
+    if comb == "sum":
+        expect = W * (2.0 + 7.0)
+    np.testing.assert_allclose(np.asarray(out), expect)
+
+
+def test_scatter_combine_no_ids_on_wire():
+    """Scatter-combine traffic must be payload-only (no id bytes)."""
+    from repro.graph import generators as gen, pgraph
+    from repro.core import scatter_combine as sc
+
+    g = gen.rmat(7, edge_factor=4, seed=0)
+    pg = pgraph.partition_graph(g, W, "random", build=("scatter_out",))
+
+    def shard(plan, vals):
+        ctx = ChannelContext(AXIS, W, pg.n_loc)
+        out = sc.broadcast_combine(ctx, plan, vals, "sum")
+        return out, ctx.stats_bytes["scatter_combine"], ctx.stats_msgs["scatter_combine"]
+
+    vals = jnp.ones((W, pg.n_loc), jnp.float32)
+    out, nbytes, nmsgs = jax.vmap(shard, axis_name=AXIS)(pg.scatter_out, vals)
+    assert int(np.asarray(nbytes).sum()) == 4 * int(np.asarray(nmsgs).sum())
+    # every vertex receives its (in-degree restricted to dedup'd workers)...
+    # sanity: total received equals total edges when vals == 1
+    total = float(np.asarray(out).sum())
+    assert total == pg.scatter_out.total_edges

@@ -1,0 +1,111 @@
+"""Pallas segment_combine kernel vs the pure-jnp oracle: shape/dtype
+sweeps + hypothesis property tests."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import combiners as cb
+from repro.kernels import ops, ref
+
+COMBINERS = ["sum", "min", "max"]
+
+
+@pytest.mark.parametrize("combiner", COMBINERS)
+@pytest.mark.parametrize(
+    "e,n,d", [(64, 16, 1), (1000, 300, 1), (513, 128, 3), (2048, 777, 5),
+              (4096, 64, 8), (100, 1000, 2)]
+)
+def test_kernel_matches_ref_f32(e, n, d, combiner):
+    rng = np.random.default_rng(e + n + d)
+    seg = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    vals = rng.normal(size=(e, d)).astype(np.float32)
+    want = ref.segment_combine_ref(jnp.array(vals), jnp.array(seg), n, combiner)
+    got = ops.segment_combine(
+        jnp.array(vals), jnp.array(seg), n, combiner,
+        use_kernel=True, assume_sorted=True,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("combiner", ["min", "max"])
+def test_kernel_matches_ref_int32(combiner):
+    rng = np.random.default_rng(0)
+    seg = np.sort(rng.integers(0, 50, 400)).astype(np.int32)
+    vals = rng.integers(-1000, 1000, (400, 2)).astype(np.int32)
+    want = ref.segment_combine_ref(jnp.array(vals), jnp.array(seg), 50, combiner)
+    got = ops.segment_combine(jnp.array(vals), jnp.array(seg), 50, combiner,
+                              use_kernel=True, assume_sorted=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_kernel_unsorted_input_sorts():
+    rng = np.random.default_rng(1)
+    seg = rng.integers(0, 37, 300).astype(np.int32)
+    vals = rng.normal(size=(300, 2)).astype(np.float32)
+    want = ref.segment_combine_ref(jnp.array(vals), jnp.array(seg), 37, "sum")
+    got = ops.segment_combine(jnp.array(vals), jnp.array(seg), 37, "sum",
+                              use_kernel=True, assume_sorted=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_kernel_out_of_range_dropped():
+    seg = np.array([0, 0, 1, 5, 9, 9], np.int32)  # 5, 9 out of range for n=4
+    vals = np.ones((6, 1), np.float32)
+    got = ops.segment_combine(jnp.array(vals), jnp.array(seg), 4, "sum",
+                              use_kernel=True, assume_sorted=True)
+    np.testing.assert_allclose(np.asarray(got)[:, 0], [2, 1, 0, 0])
+
+
+def test_kernel_custom_block_sizes():
+    rng = np.random.default_rng(2)
+    seg = np.sort(rng.integers(0, 100, 1500)).astype(np.int32)
+    vals = rng.normal(size=(1500, 2)).astype(np.float32)
+    want = ref.segment_combine_ref(jnp.array(vals), jnp.array(seg), 100, "sum")
+    for br, be in [(8, 64), (32, 128), (256, 1024)]:
+        got = ops.segment_combine(jnp.array(vals), jnp.array(seg), 100, "sum",
+                                  use_kernel=True, assume_sorted=True,
+                                  block_rows=br, block_edges=be)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    e=st.integers(1, 600),
+    n=st.integers(1, 200),
+    combiner=st.sampled_from(COMBINERS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_property(e, n, combiner, seed):
+    rng = np.random.default_rng(seed)
+    seg = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    vals = rng.normal(size=(e, 1)).astype(np.float32)
+    want = ref.segment_combine_ref(jnp.array(vals), jnp.array(seg), n, combiner)
+    got = ops.segment_combine(jnp.array(vals), jnp.array(seg), n, combiner,
+                              use_kernel=True, assume_sorted=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(1, 50))
+def test_min_by_first_combiner_property(seed, n):
+    """min_by_first == argmin by key, payload carried along."""
+    rng = np.random.default_rng(seed)
+    e = 300
+    seg = rng.integers(0, n, e).astype(np.int32)
+    keys = rng.permutation(e).astype(np.float32)  # unique keys
+    payload = rng.normal(size=(e, 2)).astype(np.float32)
+    vals = np.concatenate([keys[:, None], payload], axis=1)
+    got = cb.MIN_BY_FIRST.segment_reduce(jnp.array(vals), jnp.array(seg), n)
+    got = np.asarray(got)
+    for s in range(n):
+        sel = seg == s
+        if not sel.any():
+            assert np.isinf(got[s, 0])
+        else:
+            i = np.flatnonzero(sel)[np.argmin(keys[sel])]
+            np.testing.assert_allclose(got[s], vals[i], rtol=1e-6)

@@ -1,0 +1,150 @@
+"""Model-layer properties: SSD chunk invariance, SWA ring cache, MoE
+dispatch vs dense oracle, SPMD MoE (shard_map) vs local MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers, mamba, model as M, params as Pm
+from repro.models.config import ModelConfig
+
+
+def test_ssd_chunk_size_invariance():
+    """Chunked SSD must give identical results for any chunk size."""
+    rng = np.random.default_rng(0)
+    b, s, h, p, n = 2, 64, 3, 4, 8
+    x = jnp.asarray(rng.normal(size=(b, s, h, p)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.001, 0.1, (b, s, h)), jnp.float32)
+    a = -jnp.asarray(rng.uniform(0.5, 2.0, (h,)), jnp.float32)
+    bm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    cm = jnp.asarray(rng.normal(size=(b, s, n)), jnp.float32)
+    outs = {}
+    for chunk in (8, 16, 32, 64):
+        y, st_ = mamba.ssd_chunked(x, dt, a, bm, cm, chunk)
+        outs[chunk] = (np.asarray(y), np.asarray(st_))
+    for chunk in (16, 32, 64):
+        np.testing.assert_allclose(outs[8][0], outs[chunk][0],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(outs[8][1], outs[chunk][1],
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step SSM recurrence."""
+    rng = np.random.default_rng(1)
+    b, s, h, p, n = 1, 32, 2, 3, 4
+    x = rng.normal(size=(b, s, h, p)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.2, (b, s, h)).astype(np.float32)
+    a = -rng.uniform(0.5, 2.0, (h,)).astype(np.float32)
+    bm = rng.normal(size=(b, s, n)).astype(np.float32)
+    cm = rng.normal(size=(b, s, n)).astype(np.float32)
+    y, _ = mamba.ssd_chunked(jnp.array(x), jnp.array(dt), jnp.array(a),
+                             jnp.array(bm), jnp.array(cm), chunk=8)
+    # naive
+    state = np.zeros((b, h, p, n))
+    y_ref = np.zeros((b, s, h, p))
+    for t in range(s):
+        da = np.exp(dt[:, t] * a[None, :])  # (b,h)
+        state = state * da[..., None, None] + np.einsum(
+            "bhp,bn->bhpn", x[:, t] * dt[:, t][..., None], bm[:, t])
+        y_ref[:, t] = np.einsum("bhpn,bn->bhp", state, cm[:, t])
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(window=st.integers(4, 16), s=st.integers(20, 48),
+       seed=st.integers(0, 1000))
+def test_swa_decode_ring_cache_property(window, s, seed):
+    """SWA decode through the ring cache == full forward with SWA mask."""
+    cfg = ModelConfig("swa", n_layers=2, d_model=32, n_heads=2, n_kv_heads=2,
+                      d_ff=64, vocab=53, attn_window=window, dtype="float32")
+    prm = Pm.init_params(cfg, jax.random.PRNGKey(seed))
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (1, s), 0, 53)
+    full, _ = M.forward(cfg, prm, {"tokens": toks})
+    # prefill s-4 then decode 4
+    cut = s - 4
+    cache = M.init_cache(cfg, 1, s)
+    _, cache = M.forward(cfg, prm, {"tokens": toks[:, :cut]}, cache=cache)
+    for i in range(4):
+        dlog, cache = M.forward(cfg, prm, {"tokens": toks[:, cut+i:cut+i+1]},
+                                cache=cache, cache_pos=jnp.asarray(cut + i))
+        np.testing.assert_allclose(np.asarray(dlog[0, 0]),
+                                   np.asarray(full[0, cut + i]),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_moe_local_matches_dense_oracle():
+    """With no capacity drops, sort-based MoE == explicit per-token expert
+    mixture computed densely."""
+    cfg = ModelConfig("m", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=0, vocab=11, moe_experts=4, moe_top_k=2,
+                      moe_ff=8, capacity_factor=8.0, dtype="float32")
+    rng = np.random.default_rng(3)
+    t, d, e, ff = 24, 16, 4, 8
+    lp = {
+        "router": jnp.asarray(rng.normal(size=(d, e)), jnp.float32),
+        "moe_w1": jnp.asarray(rng.normal(size=(e, d, ff)), jnp.float32),
+        "moe_w2": jnp.asarray(rng.normal(size=(e, ff, d)), jnp.float32),
+        "moe_w3": jnp.asarray(rng.normal(size=(e, d, ff)), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(t, d)), jnp.float32)
+    got = layers.moe_local(cfg, lp, x)
+    # oracle
+    logits = np.asarray(x @ lp["router"])
+    topi = np.argsort(-logits, axis=-1)[:, :2]
+    topv = np.take_along_axis(logits, topi, axis=-1)
+    w = np.exp(topv - topv.max(-1, keepdims=True))
+    w = w / w.sum(-1, keepdims=True)
+    want = np.zeros((t, d), np.float32)
+    for i in range(t):
+        for j in range(2):
+            eid = topi[i, j]
+            h = np.asarray(x[i] @ lp["moe_w1"][eid])
+            g = np.asarray(x[i] @ lp["moe_w3"][eid])
+            act = h / (1 + np.exp(-h)) * g
+            want[i] += w[i, j] * (act @ np.asarray(lp["moe_w2"][eid]))
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+def test_spmd_moe_matches_local():
+    """shard_map MoE (1x1 mesh) == local MoE layer."""
+    from repro.distributed.moe_spmd import make_spmd_moe
+    from repro.launch.mesh import make_local_mesh
+
+    cfg = ModelConfig("m", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                      d_ff=0, vocab=11, moe_experts=4, moe_top_k=2,
+                      moe_ff=8, moe_shared_ff=16, capacity_factor=8.0,
+                      dtype="float32")
+    rng = np.random.default_rng(4)
+    d, e, ff = 16, 4, 8
+    lp = {
+        "router": jnp.asarray(rng.normal(size=(d, e)), jnp.float32),
+        "moe_w1": jnp.asarray(rng.normal(size=(e, d, ff)), jnp.float32),
+        "moe_w2": jnp.asarray(rng.normal(size=(e, ff, d)), jnp.float32),
+        "moe_w3": jnp.asarray(rng.normal(size=(e, d, ff)), jnp.float32),
+        "shared_w1": jnp.asarray(rng.normal(size=(d, 16)), jnp.float32),
+        "shared_w2": jnp.asarray(rng.normal(size=(16, d)), jnp.float32),
+        "shared_w3": jnp.asarray(rng.normal(size=(d, 16)), jnp.float32),
+        "shared_gate": jnp.asarray(rng.normal(size=(d, 1)), jnp.float32),
+    }
+    x = jnp.asarray(rng.normal(size=(2, 6, d)), jnp.float32)
+    want = layers.moe_layer(cfg, lp, x)
+    mesh = make_local_mesh()
+    moe = make_spmd_moe(cfg, mesh)
+    got = jax.jit(lambda lp, x: moe(cfg, lp, x))(lp, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_remat_and_unroll_forward_identical():
+    cfg = ModelConfig("r", n_layers=4, d_model=32, n_heads=4, n_kv_heads=2,
+                      d_ff=64, vocab=31, dtype="float32")
+    prm = Pm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 31)
+    base, _ = M.forward(cfg, prm, {"tokens": toks})
+    for kw in ({"remat": True}, {"unroll": True},
+               {"remat": True, "unroll": True}):
+        out, _ = M.forward(cfg, prm, {"tokens": toks}, **kw)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(base),
+                                   rtol=1e-5, atol=1e-6)
