@@ -19,8 +19,8 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=None)
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--csv", default=None)
-    ap.add_argument("--tables", default="4,5a,5b,5c,6,7,sssp",
-                    help="comma list: 4,5a,5b,5c,6,7,sssp")
+    ap.add_argument("--tables", default="4,5a,5b,5c,6,7,sssp,fusion",
+                    help="comma list: 4,5a,5b,5c,6,7,sssp,fusion")
     args = ap.parse_args()
 
     scale = args.scale or (15 if args.full else 13)
@@ -42,6 +42,10 @@ def main() -> None:
         tables.table7_minlabel_scc(scale - 1)
     if "sssp" in todo:
         tables.bonus_sssp(scale - 1)
+    if "fusion" in todo:
+        from benchmarks import superstep_fusion
+        print()
+        superstep_fusion.run_and_write(scale + 1)
 
     print("\n== CSV ==")
     common.print_csv()

@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Tier-1 verify (see ROADMAP.md).
+#
+#   scripts/tier1.sh           full suite (~4 min on CPU)
+#   scripts/tier1.sh --smoke   fast subset (<60 s): skips @pytest.mark.slow
+#
+# Extra args after the optional --smoke are passed through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [[ "${1:-}" == "--smoke" ]]; then
+  shift
+  exec python -m pytest -x -q -m "not slow" "$@"
+fi
+exec python -m pytest -x -q "$@"

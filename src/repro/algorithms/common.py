@@ -18,7 +18,7 @@ import jax.numpy as jnp
 from repro.core import message as msg
 from repro.core import request_respond as rr
 from repro.core import routing
-from repro.core.channel import ChannelContext
+from repro.core.channel import TRAFFIC_DTYPE, ChannelContext
 
 
 def direct_request_respond(
@@ -135,8 +135,8 @@ def cm_propagate(
         _, _, changed, it, _, _ = carry
         return changed & (it < max_iters)
 
-    z = jnp.asarray(0, jnp.int32)
-    init_c = (init, active0, jnp.asarray(True), z, z, z)
+    z = jnp.asarray(0, TRAFFIC_DTYPE)
+    init_c = (init, active0, jnp.asarray(True), jnp.asarray(0, jnp.int32), z, z)
     lab, _, _, iters, nb, nm = jax.lax.while_loop(cond, body, init_c)
     ctx.add_traffic(name, nb, nm)
     return lab, iters
@@ -173,7 +173,7 @@ def pj_converge(ctx: ChannelContext, parents, mask, *, use_reqresp=True,
         return changed & (it < max_iters)
 
     init = (parents, jnp.asarray(True), jnp.asarray(0, jnp.int32),
-            jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32))
+            jnp.asarray(0, TRAFFIC_DTYPE), jnp.asarray(0, TRAFFIC_DTYPE))
     p, _, iters, nb, nm = jax.lax.while_loop(cond, body, init)
     ctx.add_traffic(name, nb, nm)
     return p, iters

@@ -30,7 +30,7 @@ TUPLE_W = 16  # bytes of the largest message (w, comp, src, dst)
 
 
 def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
-        backend: str = "vmap", mesh=None):
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
     assert pg.n < (1 << 24), "ids must be exact in float32"
     typed = variant == "channels"
     if variant not in ("channels", "monolithic"):
@@ -121,7 +121,8 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
         "msf_cnt": jnp.zeros((pg.num_workers,), jnp.int32),
     }
     res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh)
+                                 backend=backend, mesh=mesh, mode=mode,
+                                 chunk_size=chunk_size)
     total_w = float(np.asarray(res.state["msf_w"]).sum())
     total_c = int(np.asarray(res.state["msf_cnt"]).sum())
     return {"weight": total_w, "edges": total_c,

@@ -19,7 +19,7 @@ from repro.pregel import runtime
 
 def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
         damping: float = 0.85, backend: str = "vmap", mesh=None,
-        use_kernel: bool = False):
+        use_kernel: bool = False, mode=None, chunk_size: int = 64):
     n = jnp.float32(pg.n)
 
     def step(ctx, gs, state, step_idx):
@@ -53,5 +53,6 @@ def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
 
     state0 = {"pr": jnp.where(pg.v_mask, 1.0 / n, 0.0)}
     res = runtime.run_supersteps(pg, step, state0, max_steps=iters,
-                                 backend=backend, mesh=mesh)
+                                 backend=backend, mesh=mesh, mode=mode,
+                                 chunk_size=chunk_size)
     return pg.to_global(res.state["pr"]), res

@@ -26,7 +26,8 @@ def parents_to_local(pg: PartitionedGraph, parents_old: np.ndarray):
 
 
 def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
-        max_steps: int = 64, backend: str = "vmap", mesh=None):
+        max_steps: int = 64, backend: str = "vmap", mesh=None, mode=None,
+        chunk_size: int = 64):
     p0 = parents_to_local(pg, parents_old)
 
     def step(ctx, gs, state, step_idx):
@@ -45,6 +46,7 @@ def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
         return {"P": newp}, jnp.all(newp == p), overflow
 
     res = runtime.run_supersteps(pg, step, {"P": p0}, max_steps=max_steps,
-                                 backend=backend, mesh=mesh)
+                                 backend=backend, mesh=mesh, mode=mode,
+                                 chunk_size=chunk_size)
     roots_new = pg.to_global(res.state["P"])
     return roots_new, res

@@ -23,7 +23,7 @@ INF32 = jnp.iinfo(jnp.int32).max
 
 
 def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
-        backend: str = "vmap", mesh=None):
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
     """pg must be built with scatter_out+scatter_in and (prop_out+prop_in
     for "prop") or (raw_out+raw_in for "basic") on the DIRECTED graph."""
 
@@ -83,5 +83,6 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
         "iters": jnp.zeros((pg.num_workers,), jnp.int32),
     }
     res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh)
+                                 backend=backend, mesh=mesh, mode=mode,
+                                 chunk_size=chunk_size)
     return pg.to_global(res.state["scc"]), res

@@ -19,7 +19,8 @@ INF = jnp.float32(np.inf)
 
 
 def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
-        max_steps: int = 10_000, backend: str = "vmap", mesh=None):
+        max_steps: int = 10_000, backend: str = "vmap", mesh=None,
+        mode=None, chunk_size: int = 64):
     src_new = int(pg.new_of_old.arr[source_old])
     ids = pg.global_ids()
     dist0 = jnp.where(ids == src_new, 0.0, INF).astype(jnp.float32)
@@ -37,7 +38,8 @@ def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
 
         state0 = {"dist": dist0, "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
         res = runtime.run_supersteps(pg, step, state0, max_steps=1,
-                                     backend=backend, mesh=mesh)
+                                     backend=backend, mesh=mesh, mode=mode,
+                                     chunk_size=chunk_size)
     elif variant == "basic":
 
         def step(ctx, gs, state, step_idx):
@@ -58,7 +60,8 @@ def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
 
         state0 = {"dist": dist0, "active": ids == src_new}
         res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                     backend=backend, mesh=mesh)
+                                     backend=backend, mesh=mesh, mode=mode,
+                                     chunk_size=chunk_size)
     else:
         raise ValueError(variant)
     return pg.to_global(res.state["dist"]), res

@@ -28,7 +28,8 @@ INF32 = jnp.iinfo(jnp.int32).max
 
 
 def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
-        backend: str = "vmap", mesh=None, use_kernel: bool = False):
+        backend: str = "vmap", mesh=None, use_kernel: bool = False,
+        mode=None, chunk_size: int = 64):
     use_rr = variant in ("reqresp", "both")
     use_sc = variant in ("scatter", "both")
     monolithic = variant == "monolithic"
@@ -113,5 +114,6 @@ def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
     ids = pg.global_ids().astype(jnp.int32)
     state0 = {"D": jnp.where(pg.v_mask, ids, ids)}  # D[u] = u (pads too)
     res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh)
+                                 backend=backend, mesh=mesh, mode=mode,
+                                 chunk_size=chunk_size)
     return pg.to_global(res.state["D"]), res

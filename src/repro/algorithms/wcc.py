@@ -20,7 +20,7 @@ INF32 = jnp.iinfo(jnp.int32).max
 
 
 def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
-        backend: str = "vmap", mesh=None):
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
     ids = pg.global_ids().astype(jnp.int32)
 
     if variant == "prop":
@@ -37,7 +37,8 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
             "info": jnp.zeros((pg.num_workers, 2), jnp.int32),
         }
         res = runtime.run_supersteps(pg, step, state0, max_steps=1,
-                                     backend=backend, mesh=mesh)
+                                     backend=backend, mesh=mesh, mode=mode,
+                                     chunk_size=chunk_size)
     elif variant == "basic":
 
         def step(ctx, gs, state, step_idx):
@@ -58,7 +59,8 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
             "active": pg.v_mask,
         }
         res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                     backend=backend, mesh=mesh)
+                                     backend=backend, mesh=mesh, mode=mode,
+                                     chunk_size=chunk_size)
     else:
         raise ValueError(variant)
 

@@ -1,7 +1,11 @@
 """Aggregator channel (paper Table I): global reduction available to every
 vertex next superstep. Lowers to a single mesh collective; traffic is
 O(W * payload), which we account like the paper does (one value per
-worker toward the master, broadcast back)."""
+worker toward the master, broadcast back).
+
+``all_halted`` is the runtime's voting-to-halt primitive: a device-side
+psum whose result feeds the fused loop condition directly — no host
+involvement per superstep."""
 from __future__ import annotations
 
 from typing import Optional

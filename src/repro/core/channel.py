@@ -1,4 +1,4 @@
-"""Channel base machinery: per-step context and message accounting.
+"""Channel base machinery: per-step context, registry, message accounting.
 
 The paper's ``Channel`` base class exposes serialize()/deserialize() hooks
 around raw per-peer byte buffers. In the SPMD adaptation a channel is a
@@ -6,6 +6,23 @@ pure function over per-shard arrays that internally performs axis-name
 collectives; the ``ChannelContext`` carries the axis name and accumulates
 the per-channel traffic statistics (logical bytes / message counts that
 cross worker boundaries — the quantity the paper's tables report).
+
+Two accounting regimes share the same ``add_traffic`` call sites:
+
+  - *open* (no registry): stats keys appear dynamically as channels are
+    traced — what a host-driven loop can consume, since the dict is
+    rebuilt from scratch every superstep.
+  - *registered*: a ``ChannelRegistry`` fixes the key set and per-key
+    shape/dtype up front, so the accumulated stats form a fixed-shape
+    pytree that can live in a ``lax.while_loop`` / ``lax.scan`` carry.
+    Registries are discovered by a one-time dry trace of the step
+    function (``jax.eval_shape`` — no compute), or declared explicitly.
+
+Per-step counters are ``TRAFFIC_DTYPE`` (int32) on device. Host and
+chunked modes accumulate across supersteps host-side in Python ints
+(int64-safe); fused mode accumulates on device in int32 and latches a
+wrap-detection flag that the runtime surfaces as a RuntimeWarning —
+switch to chunked mode for runs heavy enough to trip it.
 """
 from __future__ import annotations
 
@@ -15,25 +32,88 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+# Device-side traffic-counter dtype. Kept 32-bit: collectives and loop
+# carries stay cheap, and cross-superstep totals are accumulated host-side
+# in Python ints (arbitrary precision) at chunk boundaries.
+TRAFFIC_DTYPE = jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelRegistry:
+    """Fixed set of channel stat keys (and their per-shard shapes/dtypes).
+
+    ``names`` is the ordered tuple of channel names that appear in one
+    superstep; ``shapes``/``dtypes`` describe the per-step stat leaf for
+    each name as produced by the *mapped* step function (e.g. ``(W,)``
+    under vmap, ``()`` under shard_map).
+    """
+
+    names: Tuple[str, ...]
+    shapes: Dict[str, tuple]
+    dtypes: Dict[str, jnp.dtype]
+
+    def zeros(self) -> Dict[str, jax.Array]:
+        """One zeroed stats dict (used for both bytes and msgs accums)."""
+        return {
+            n: jnp.zeros(self.shapes[n], self.dtypes[n]) for n in self.names
+        }
+
+    @classmethod
+    def from_stats_structure(cls, nbytes_struct) -> "ChannelRegistry":
+        """Build from the (eval_shape'd) per-step bytes-stats dict."""
+        names = tuple(sorted(nbytes_struct))
+        return cls(
+            names=names,
+            shapes={n: tuple(nbytes_struct[n].shape) for n in names},
+            dtypes={n: jnp.dtype(nbytes_struct[n].dtype) for n in names},
+        )
+
+    @classmethod
+    def declare(cls, names, shape=(), dtype=TRAFFIC_DTYPE) -> "ChannelRegistry":
+        """Explicit declaration (skips the dry trace)."""
+        names = tuple(names)
+        return cls(
+            names=names,
+            shapes={n: tuple(shape) for n in names},
+            dtypes={n: jnp.dtype(dtype) for n in names},
+        )
+
 
 @dataclasses.dataclass
 class ChannelContext:
     axis: str
     num_workers: int
     n_loc: int
+    registry: ChannelRegistry = None
     stats_bytes: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
     stats_msgs: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.registry is not None:
+            # Seed every registered key so the stats structure is fixed
+            # even when a channel is conditionally skipped this step.
+            z = jnp.asarray(0, TRAFFIC_DTYPE)
+            for n in self.registry.names:
+                self.stats_bytes.setdefault(n, z)
+                self.stats_msgs.setdefault(n, z)
 
     def me(self):
         return jax.lax.axis_index(self.axis)
 
     def add_traffic(self, name: str, nbytes, nmsgs):
-        z = jnp.asarray(0, jnp.int64) if False else jnp.asarray(0, jnp.int32)
+        if self.registry is not None and name not in self.registry.names:
+            raise KeyError(
+                f"channel {name!r} is not in the registry {self.registry.names} "
+                "— it did not appear in the dry trace / declaration. Channels "
+                "must be traced unconditionally (mask traffic to zero instead "
+                "of skipping the call)."
+            )
+        z = jnp.asarray(0, TRAFFIC_DTYPE)
         self.stats_bytes[name] = self.stats_bytes.get(name, z) + jnp.asarray(
-            nbytes, jnp.int32
+            nbytes, TRAFFIC_DTYPE
         )
         self.stats_msgs[name] = self.stats_msgs.get(name, z) + jnp.asarray(
-            nmsgs, jnp.int32
+            nmsgs, TRAFFIC_DTYPE
         )
 
     def stats(self) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:

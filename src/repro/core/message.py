@@ -5,6 +5,10 @@ over deliveries. CombinedMessage — a combiner is applied both sender-side
 (per destination, before the exchange) and receiver-side, yielding a dense
 per-vertex combined value. Both use dynamic sort-based routing, and both
 put destination ids on the wire — the costs the optimized channels remove.
+
+Registry contract (fused runtime): every send is traced unconditionally —
+an empty `valid` mask yields zero accounted traffic rather than a skipped
+``add_traffic`` call, so the per-step stats pytree keeps a fixed shape.
 """
 from __future__ import annotations
 

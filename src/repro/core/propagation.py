@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import combiners as cb
-from repro.core.channel import ChannelContext
+from repro.core.channel import TRAFFIC_DTYPE, ChannelContext
 from repro.graph.pgraph import PropPlan
 from repro.kernels import ops as kops
 
@@ -104,7 +104,7 @@ def propagate(
             use_kernel=False, assume_sorted=True,
         )
         changed_u = jnp.any(u_vals != prev_u, axis=-1) & (u_owner != w)
-        remote_changed = jnp.sum(changed_u & (u_owner != me)).astype(jnp.int32)
+        remote_changed = jnp.sum(changed_u & (u_owner != me)).astype(TRAFFIC_DTYPE)
         buf = jnp.full((w * c + 1, d), ident, dtype)
         buf = buf.at[plan.cut.pack_slot].set(u_vals, mode="drop")
         recv = jax.lax.all_to_all(
@@ -129,7 +129,8 @@ def propagate(
     prev0 = jnp.full((plan.cut.u_cap, d), ident, dtype)
     init = (
         lab0, prev0, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
-        jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32), jnp.asarray(True),
+        jnp.asarray(0, TRAFFIC_DTYPE), jnp.asarray(0, TRAFFIC_DTYPE),
+        jnp.asarray(True),
     )
     lab, _, rounds, iters, nbytes, nmsgs, _ = jax.lax.while_loop(
         outer_cond, outer_body, init

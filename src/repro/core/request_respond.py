@@ -6,6 +6,10 @@ only unique ids, and the responder replies with a *positionally ordered
 value list* — no ids on the respond wire. This is the paper's fix for the
 respond-phase imbalance caused by high-degree vertices, plus its byte
 trick (reply in request order).
+
+Registry contract (fused runtime): the channel contributes two fixed stat
+keys — ``<name>/request`` and ``<name>/respond`` — on every trace, even
+when no request is valid (zero traffic, not a missing key).
 """
 from __future__ import annotations
 

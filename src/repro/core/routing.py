@@ -17,6 +17,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.channel import TRAFFIC_DTYPE
+
 BIG = jnp.iinfo(jnp.int32).max
 
 
@@ -122,4 +124,4 @@ def reply(ctx, routed: Routed, resp, m: int):
 def remote_count(ctx, sent_count):
     """Messages that actually cross a worker boundary (exclude self)."""
     me = ctx.me()
-    return sent_count.sum() - sent_count[me]
+    return (sent_count.sum() - sent_count[me]).astype(TRAFFIC_DTYPE)

@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import combiners as cb
-from repro.core.channel import ChannelContext
+from repro.core.channel import TRAFFIC_DTYPE, ChannelContext
 from repro.graph.pgraph import ScatterPlan
 from repro.kernels import ops as kops
 
@@ -74,6 +74,6 @@ def broadcast_combine(
     )
 
     me = ctx.me()
-    remote = plan.send_count.sum() - plan.send_count[me]
+    remote = (plan.send_count.sum() - plan.send_count[me]).astype(TRAFFIC_DTYPE)
     ctx.add_traffic(name, remote * d * jnp.dtype(vals.dtype).itemsize, remote)
     return out[:, 0] if squeeze else out

@@ -4,6 +4,9 @@
 associative+commutative combiners (e.g. min-by-key with payload, used by
 Boruvka MSF). This implements the same segmented Hillis-Steele scan the
 Pallas kernel uses, in pure jnp, over sorted segment ids.
+
+Shape-static by construction (the scan ladder depends only on M), so it
+is safe inside the fused runtime's ``lax.while_loop``/``lax.scan`` body.
 """
 from __future__ import annotations
 

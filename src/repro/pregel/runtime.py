@@ -7,21 +7,43 @@ backends execute the same step code:
   - ``vmap``: W logical workers on one device (tests/benchmarks on CPU);
   - ``shard_map``: W shards on a real mesh (the deployment path).
 
+Orthogonally, three *execution modes* drive the superstep loop:
+
+  - ``fused`` (default): the whole loop runs on device inside a single
+    ``jax.lax.while_loop`` dispatch — halt vote, overflow latch, step
+    counter and per-channel traffic all live in the loop carry. One
+    host→device round-trip per *run* instead of per *superstep*.
+  - ``chunked``: ``jax.lax.scan`` over ``chunk_size`` supersteps per
+    dispatch; control returns to the host at chunk boundaries for stat
+    streaming (int64-safe host accumulation) and max-step enforcement.
+  - ``host``: the legacy Python loop — one jitted dispatch plus a
+    blocking device→host readback per superstep. Kept as the baseline
+    the fusion benchmark measures against.
+
+The fused/chunked carries need a fixed-shape stats pytree, so the runtime
+performs a one-time dry trace (``jax.eval_shape`` — no compute) of the
+mapped step to discover the ``ChannelRegistry``: the set of channel names
+and their per-step stat shapes. Algorithms may also declare their
+channels explicitly via ``channels=(...)``; the discovered set is then
+validated against the declaration.
+
 Voting-to-halt: the step function returns a local halt vote; the runtime
-ANDs votes across workers (psum) and stops the host loop.
+ANDs votes across workers (psum). In fused/chunked mode the AND result
+feeds the loop condition on device; in host mode it is pulled back and
+checked in Python.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregator
-from repro.core.channel import ChannelContext
+from repro.core.channel import ChannelContext, ChannelRegistry
 from repro.graph.pgraph import PartitionedGraph
 
 AXIS = "workers"
@@ -36,6 +58,16 @@ class RunResult:
     msgs_by_channel: Dict[str, int]
     wall_time_s: float
     step_times_s: list
+    # Execution metadata (new fields default so callers constructing the
+    # seed-era 7-tuple keep working).
+    mode: str = "host"
+    dispatches: int = 0
+    compile_time_s: float = 0.0
+    # Host time spent *driving* the run — dispatch enqueues, flag/stat
+    # readbacks and Python bookkeeping — excluding device waits and (for
+    # host mode) the step-0 trace+compile. This is the per-superstep cost
+    # the fused modes amortize to once per dispatch.
+    host_overhead_s: float = 0.0
 
     @property
     def total_bytes(self) -> int:
@@ -44,6 +76,27 @@ class RunResult:
     @property
     def total_msgs(self) -> int:
         return int(sum(self.msgs_by_channel.values()))
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """shard_map across jax versions (jax.shard_map vs experimental)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental import shard_map as _sm
+
+    return _sm.shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+
+def _scalar(x):
+    """() view of a flag that may be per-worker replicated ((W,) or ())."""
+    return jnp.asarray(x).reshape(-1)[0] if jnp.ndim(x) else jnp.asarray(x)
+
+
+def _host_int(v) -> int:
+    """Device stat leaf -> exact host int (int64-safe accumulation)."""
+    return int(np.asarray(v).astype(np.int64).sum())
 
 
 def run_supersteps(
@@ -55,76 +108,130 @@ def run_supersteps(
     mesh: Optional[jax.sharding.Mesh] = None,
     axis: str = AXIS,
     check_overflow: bool = True,
+    mode: Optional[str] = None,
+    chunk_size: int = 64,
+    channels: Optional[Sequence[str]] = None,
 ) -> RunResult:
     """Run `step_fn(ctx, graph_shard, state_shard, step)` to halt.
 
     state0: pytree with per-vertex leaves of shape (W, n_loc, ...).
     step_fn returns (new_state, halt_local_bool) and may also return a
     third element `overflow` (bool) which the runtime surfaces as an error.
+
+    mode: "fused" (default), "chunked", or "host" — see module docstring.
+    channels: optional explicit channel-name declaration; validated
+      against the dry-trace discovery (a mismatch is a programming error).
     """
     W, n_loc = graph.num_workers, graph.n_loc
+    if mode is None:
+        mode = "fused"
+    if mode not in ("fused", "chunked", "host"):
+        raise ValueError(f"unknown execution mode {mode!r}")
 
-    def shard_step(g_shard, state_shard, step_idx):
-        ctx = ChannelContext(axis, W, n_loc)
-        out = step_fn(ctx, g_shard, state_shard, step_idx)
-        if len(out) == 3:
-            new_state, halt, overflow = out
-        else:
-            new_state, halt = out
-            overflow = jnp.asarray(False)
-        halt_all = aggregator.all_halted(ctx, halt)
-        overflow_any = jax.lax.psum(jnp.asarray(overflow, jnp.int32), axis) > 0
-        nbytes, nmsgs = ctx.stats()
-        return new_state, halt_all, overflow_any, nbytes, nmsgs
+    def make_shard_step(registry: Optional[ChannelRegistry]):
+        def shard_step(g_shard, state_shard, step_idx):
+            ctx = ChannelContext(axis, W, n_loc, registry=registry)
+            out = step_fn(ctx, g_shard, state_shard, step_idx)
+            if len(out) == 3:
+                new_state, halt, overflow = out
+            else:
+                new_state, halt = out
+                overflow = jnp.asarray(False)
+            halt_all = aggregator.all_halted(ctx, halt)
+            overflow_any = jax.lax.psum(
+                jnp.asarray(overflow, jnp.int32), axis) > 0
+            nbytes, nmsgs = ctx.stats()
+            return new_state, halt_all, overflow_any, nbytes, nmsgs
 
-    if backend == "vmap":
-        mapped = jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
+        return shard_step
 
-        @jax.jit
-        def one_step(state, step_idx):
-            return mapped(graph, state, step_idx)
-
-    elif backend == "shard_map":
-        assert mesh is not None
-        P = jax.sharding.PartitionSpec
-        mapped = jax.shard_map(
-            shard_step,
-            mesh=mesh,
-            in_specs=(P(axis), P(axis), P()),
-            out_specs=(P(axis), P(), P(), P(), P()),
-            check_vma=False,
-        )
-
-        @jax.jit
-        def one_step(state, step_idx):
-            return mapped(graph, state, step_idx)
-
-    else:
+    def map_shards(shard_step):
+        if backend == "vmap":
+            return jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
+        if backend == "shard_map":
+            assert mesh is not None
+            P = jax.sharding.PartitionSpec
+            return _shard_map(
+                shard_step,
+                mesh=mesh,
+                in_specs=(P(axis), P(axis), P()),
+                out_specs=(P(axis), P(), P(), P(), P()),
+            )
         raise ValueError(backend)
 
+    # --- channel registry: one-time dry trace (no compute). Host mode
+    # consumes open per-step dicts and needs no fixed carry, so it skips
+    # the extra trace unless a declaration should be validated. ----------
+    registry = None
+    if mode in ("fused", "chunked") or channels is not None:
+        probe = map_shards(make_shard_step(None))
+        out_struct = jax.eval_shape(
+            lambda s, i: probe(graph, s, i), state0, jnp.asarray(0, jnp.int32)
+        )
+        _, _, _, bytes_struct, _ = out_struct
+        registry = ChannelRegistry.from_stats_structure(bytes_struct)
+        if channels is not None:
+            declared = tuple(sorted(channels))
+            if declared != registry.names:
+                raise ValueError(
+                    f"declared channels {declared} != traced channels "
+                    f"{registry.names}"
+                )
+
+    mapped = map_shards(make_shard_step(registry))
+
+    def one_step(state, step_idx):
+        return mapped(graph, state, step_idx)
+
+    if mode == "host":
+        return _run_host(one_step, state0, max_steps, check_overflow)
+    if mode == "fused":
+        return _run_fused(one_step, registry, state0, max_steps,
+                          check_overflow)
+    return _run_chunked(one_step, registry, state0, max_steps,
+                        check_overflow, chunk_size)
+
+
+# ---------------------------------------------------------------------------
+# host mode: one dispatch + blocking readback per superstep (baseline)
+# ---------------------------------------------------------------------------
+
+
+def _run_host(one_step, state0, max_steps, check_overflow) -> RunResult:
+    stepper = jax.jit(one_step)
     bytes_acc: Dict[str, int] = {}
     msgs_acc: Dict[str, int] = {}
     state = state0
     halted = False
     t0 = time.perf_counter()
     step_times = []
+    overhead = 0.0
+    step = -1  # so max_steps=0 reports zero executed supersteps
     for step in range(max_steps):
         ts = time.perf_counter()
-        state, halt_all, overflow, nbytes, nmsgs = one_step(
+        state, halt_all, overflow, nbytes, nmsgs = stepper(
             state, jnp.asarray(step, jnp.int32)
         )
+        t_enq = time.perf_counter()
         jax.block_until_ready(state)
-        step_times.append(time.perf_counter() - ts)
+        t_dev = time.perf_counter()
+        step_times.append(t_dev - ts)
         if check_overflow and bool(np.asarray(overflow).reshape(-1)[0]):
             raise RuntimeError(
                 f"channel capacity overflow at superstep {step} — "
                 "increase the channel capacity in the routing plan"
             )
         for k, v in nbytes.items():
-            bytes_acc[k] = bytes_acc.get(k, 0) + int(np.asarray(v).sum())
+            bytes_acc[k] = bytes_acc.get(k, 0) + _host_int(v)
         for k, v in nmsgs.items():
-            msgs_acc[k] = msgs_acc.get(k, 0) + int(np.asarray(v).sum())
-        if bool(np.asarray(halt_all).reshape(-1)[0]):
+            msgs_acc[k] = msgs_acc.get(k, 0) + _host_int(v)
+        halt_now = bool(np.asarray(halt_all).reshape(-1)[0])
+        # dispatch enqueue (step 0 is trace+compile — not counted) plus
+        # readback/bookkeeping time: the host cost of driving one step
+        if step > 0:
+            overhead += t_enq - ts
+        overhead += time.perf_counter() - t_dev
+        if halt_now:
             halted = True
             break
     wall = time.perf_counter() - t0
@@ -136,4 +243,182 @@ def run_supersteps(
         msgs_by_channel=msgs_acc,
         wall_time_s=wall,
         step_times_s=step_times,
+        mode="host",
+        dispatches=step + 1,
+        host_overhead_s=overhead,
+    )
+
+
+# ---------------------------------------------------------------------------
+# fused mode: the entire superstep loop is one lax.while_loop dispatch
+# ---------------------------------------------------------------------------
+
+
+def _run_fused(one_step, registry, state0, max_steps,
+               check_overflow) -> RunResult:
+    zeros = registry.zeros()
+
+    def loop(state):
+        def cond(carry):
+            _, i, halted, overflow, _, _, _ = carry
+            go = (~halted) & (i < max_steps)
+            if check_overflow:
+                go = go & (~overflow)
+            return go
+
+        def body(carry):
+            state, i, _, overflow, nb, nm, wrapped = carry
+            new_state, halt, ovf, db, dm = one_step(state, i)
+            nb2 = jax.tree_util.tree_map(jnp.add, nb, db)
+            nm2 = jax.tree_util.tree_map(jnp.add, nm, dm)
+            # per-step deltas are non-negative, so a decreasing accumulator
+            # means the int32 counter wrapped — latch it for the host
+            for old, new in ((nb, nb2), (nm, nm2)):
+                for o, n in zip(jax.tree_util.tree_leaves(old),
+                                jax.tree_util.tree_leaves(new)):
+                    wrapped = wrapped | jnp.any(n < o)
+            return (new_state, i + 1, _scalar(halt),
+                    overflow | _scalar(ovf), nb2, nm2, wrapped)
+
+        init = (state, jnp.asarray(0, jnp.int32), jnp.zeros((), bool),
+                jnp.zeros((), bool), zeros, zeros, jnp.zeros((), bool))
+        return jax.lax.while_loop(cond, body, init)
+
+    tc = time.perf_counter()
+    compiled = jax.jit(loop).lower(state0).compile()
+    compile_s = time.perf_counter() - tc
+
+    t0 = time.perf_counter()
+    state, steps, halted, overflow, nb, nm, wrapped = compiled(state0)
+    t_enq = time.perf_counter()
+    jax.block_until_ready(state)
+    t_dev = time.perf_counter()
+    wall = t_dev - t0
+    if bool(np.asarray(wrapped)):
+        import warnings
+
+        warnings.warn(
+            "per-channel traffic counters overflowed int32 inside the fused "
+            "loop; bytes/msgs totals are unreliable — use mode='chunked' "
+            "(exact host-side int64 accumulation) for runs this heavy",
+            RuntimeWarning,
+        )
+
+    steps = int(np.asarray(steps))
+    halted_b = bool(np.asarray(halted))
+    bytes_by = {k: _host_int(v) for k, v in nb.items()}
+    msgs_by = {k: _host_int(v) for k, v in nm.items()}
+    overhead = (t_enq - t0) + (time.perf_counter() - t_dev)
+    if check_overflow and bool(np.asarray(overflow)):
+        raise RuntimeError(
+            f"channel capacity overflow at superstep {steps - 1} — "
+            "increase the channel capacity in the routing plan"
+        )
+    return RunResult(
+        state=state,
+        steps=steps,
+        halted=halted_b,
+        bytes_by_channel=bytes_by,
+        msgs_by_channel=msgs_by,
+        wall_time_s=wall,
+        step_times_s=[wall],
+        mode="fused",
+        dispatches=1,
+        compile_time_s=compile_s,
+        host_overhead_s=overhead,
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked mode: lax.scan over K supersteps per dispatch; the host streams
+# per-step stats (exact int64 accumulation) at every chunk boundary
+# ---------------------------------------------------------------------------
+
+
+def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
+                 chunk_size) -> RunResult:
+    K = max(1, min(chunk_size, max_steps))
+    zeros = registry.zeros()
+
+    def chunk(state, i0, halted0, overflow0):
+        def body(carry, _):
+            state, i, halted, overflow = carry
+            stop = halted | (i >= max_steps)
+            if check_overflow:
+                stop = stop | overflow
+
+            def do(operand):
+                state, i = operand
+                new_state, halt, ovf, db, dm = one_step(state, i)
+                return ((new_state, i + 1, _scalar(halt),
+                         overflow | _scalar(ovf)), (db, dm))
+
+            def skip(operand):
+                state, i = operand
+                # skipped steps contribute zero traffic
+                return ((state, i, halted, overflow), (zeros, zeros))
+
+            return jax.lax.cond(stop, skip, do, (state, i))
+
+        (state, i, halted, overflow), (db, dm) = jax.lax.scan(
+            body, (state, i0, halted0, overflow0), None, length=K
+        )
+        return state, i, halted, overflow, db, dm
+
+    f = jnp.zeros((), bool)
+    tc = time.perf_counter()
+    compiled = (
+        jax.jit(chunk)
+        .lower(state0, jnp.asarray(0, jnp.int32), f, f)
+        .compile()
+    )
+    compile_s = time.perf_counter() - tc
+
+    bytes_acc: Dict[str, int] = {}
+    msgs_acc: Dict[str, int] = {}
+    state = state0
+    i = jnp.asarray(0, jnp.int32)
+    halted, overflow = f, f
+    chunk_times = []
+    dispatches = 0
+    overhead = 0.0
+    t0 = time.perf_counter()
+    while True:
+        ts = time.perf_counter()
+        state, i, halted, overflow, db, dm = compiled(
+            state, i, halted, overflow
+        )
+        t_enq = time.perf_counter()
+        jax.block_until_ready(state)
+        t_dev = time.perf_counter()
+        chunk_times.append(t_dev - ts)
+        dispatches += 1
+        # stream the chunk's per-step stats out (skipped steps are zero)
+        for k, v in db.items():
+            bytes_acc[k] = bytes_acc.get(k, 0) + _host_int(v)
+        for k, v in dm.items():
+            msgs_acc[k] = msgs_acc.get(k, 0) + _host_int(v)
+        steps = int(np.asarray(i))
+        halt_now = bool(np.asarray(halted))
+        overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
+        if check_overflow and bool(np.asarray(overflow)):
+            raise RuntimeError(
+                f"channel capacity overflow at superstep {steps - 1} — "
+                "increase the channel capacity in the routing plan"
+            )
+        if halt_now or steps >= max_steps:
+            break
+    wall = time.perf_counter() - t0
+    return RunResult(
+        state=state,
+        steps=steps,
+        halted=bool(np.asarray(halted)),
+        bytes_by_channel=bytes_acc,
+        msgs_by_channel=msgs_acc,
+        wall_time_s=wall,
+        step_times_s=chunk_times,
+        mode="chunked",
+        dispatches=dispatches,
+        compile_time_s=compile_s,
+        host_overhead_s=overhead,
     )

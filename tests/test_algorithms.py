@@ -42,6 +42,7 @@ def test_pagerank(rmat_directed, variant):
     assert res.steps == 15
 
 
+@pytest.mark.slow
 def test_pagerank_scatter_fewer_bytes(rmat_directed):
     pg = pgraph.partition_graph(rmat_directed, 4, "random",
                                 build=("scatter_out", "raw_out"))
@@ -101,6 +102,7 @@ def test_wcc_prop_fewer_global_rounds():
 
 
 @pytest.mark.parametrize("variant", ["basic", "reqresp", "scatter", "both"])
+@pytest.mark.slow
 def test_sv(rmat_sym, pg_sym, variant):
     lab, res = sv.run(pg_sym, variant=variant)
     truth = gen.components_ground_truth(rmat_sym)
@@ -108,6 +110,7 @@ def test_sv(rmat_sym, pg_sym, variant):
     assert res.halted
 
 
+@pytest.mark.slow
 def test_sv_composition_fewest_bytes(pg_sym):
     totals = {}
     for variant in ("basic", "reqresp", "scatter", "both"):
@@ -129,6 +132,7 @@ def test_sssp(variant):
 
 
 @pytest.mark.parametrize("variant", ["prop", "basic"])
+@pytest.mark.slow
 def test_scc(variant):
     g = gen.rmat(8, edge_factor=3, seed=7)
     pg = pgraph.partition_graph(
@@ -142,6 +146,7 @@ def test_scc(variant):
 
 
 @pytest.mark.parametrize("variant", ["channels", "monolithic"])
+@pytest.mark.slow
 def test_msf(variant):
     g = gen.rmat(8, edge_factor=4, seed=9, weighted=True).symmetrized()
     pg = pgraph.partition_graph(g, 4, "random", build=("raw_out",))
@@ -152,6 +157,7 @@ def test_msf(variant):
     assert out["edges"] == g.n - len(set(truth.tolist()))
 
 
+@pytest.mark.slow
 def test_msf_typed_channels_fewer_bytes():
     g = gen.rmat(8, edge_factor=4, seed=9, weighted=True).symmetrized()
     pg = pgraph.partition_graph(g, 4, "random", build=("raw_out",))

@@ -5,6 +5,10 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import aggregator as agg

@@ -6,6 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# model-config sweeps dominate suite time; excluded from the smoke tier
+pytestmark = pytest.mark.slow
+
 from repro.configs import registry as R
 from repro.models import model as M
 from repro.models import params as Pm

@@ -3,6 +3,10 @@ sweeps + hypothesis property tests."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import combiners as cb

@@ -22,6 +22,7 @@ TINY = ModelConfig("tiny", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
                    d_ff=64, vocab=61, dtype="float32")
 
 
+@pytest.mark.slow
 def test_grad_accumulation_equivalence():
     """microbatches=4 must give the same update as microbatches=1."""
     opt = AdamW(lr=1e-3, grad_clip=0)
@@ -37,6 +38,7 @@ def test_grad_accumulation_equivalence():
                                    rtol=1e-4, atol=1e-6)
 
 
+@pytest.mark.slow
 def test_loss_decreases_100_steps():
     opt = AdamW(lr=3e-3, warmup_steps=10)
     state = ts.init_train_state(TINY, opt, jax.random.PRNGKey(0))
@@ -79,6 +81,7 @@ def test_checkpoint_elastic_reshard(tmp_path):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.slow
 def test_supervisor_resume(tmp_path):
     opt = AdamW(lr=1e-3)
     sup = TrainSupervisor(str(tmp_path), save_every=5, async_save=False)
@@ -121,6 +124,7 @@ def test_gradient_compression_error_feedback():
                                rtol=1e-4)
 
 
+@pytest.mark.slow
 def test_generate_greedy_deterministic():
     cfg = TINY
     prm = Pm.init_params(cfg, jax.random.PRNGKey(0))
