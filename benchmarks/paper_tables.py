@@ -1,0 +1,162 @@
+"""Paper-style composition tables: unoptimized vs composed, host vs fused.
+
+    PYTHONPATH=src python -m benchmarks.paper_tables [--scale N] [--out f]
+
+Reproduces the shape of the paper's evaluation tables (§V, Tables IV-VII)
+with the composition layer as the subject: for each algorithm, the
+*unoptimized* (standard-channel / Pregel-style) program against the
+*composed* (optimized-channel-stack) program, under both the ``host``
+and ``fused`` execution modes. Rows record supersteps (global rounds),
+remote messages, remote bytes, and wall time; the S-V pair is the
+paper's headline §V case study — the composed program must win on BOTH
+global rounds and traffic bytes, and the emitted JSON
+(``BENCH_paper_tables.json``) records that check under ``"headline"``.
+
+Wall times on CPU-sized graphs are dominated by per-superstep dispatch,
+which is what the fused column shows; traffic and round counts are exact
+and scale-invariant (the channels count logical remote bytes, as the
+paper's tables do).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from benchmarks import common
+from repro.algorithms import msf, pagerank, pointer_jumping, sv, wcc
+from repro.graph import generators as gen, pgraph
+
+MODES = ("host", "fused")
+
+
+def _row(algorithm, dataset, mode, program, variant, res, **extra):
+    row = {
+        "algorithm": algorithm,
+        "dataset": dataset,
+        "mode": mode,
+        "program": program,
+        "variant": variant,
+        "supersteps": res.steps,
+        "messages": res.total_msgs,
+        "bytes": res.total_bytes,
+        "wall_time_s": round(res.wall_time_s, 4),
+        "runtime_s": round(common.adjusted_runtime(res), 4),
+        "dispatches": res.dispatches,
+    }
+    row.update(extra)
+    print(f"  {algorithm:4s} {program:12s} [{mode:5s}] "
+          f"rounds {res.steps:4d}  msgs {res.total_msgs:9d}  "
+          f"bytes {res.total_bytes:11d}  wall {res.wall_time_s:7.3f}s")
+    return row
+
+
+def run(scale: int):
+    rows = []
+
+    # --- S-V: the headline composition (paper §V / Table VI) -------------
+    pg_soc = common.partitioned("social", scale, "random",
+                                ("scatter_out", "prop_out", "raw_out"))
+    sv_stats = {}
+    for mode in MODES:
+        for program, variant in (("unoptimized", "basic"),
+                                 ("composed", "composed")):
+            _, res = sv.run(pg_soc, variant=variant, mode=mode)
+            extra = {}
+            if variant == "composed":
+                extra["bytes_by_component"] = {
+                    k: res.bytes_under(f"sv/{k}")
+                    for k in ("pointer", "neighbor_min", "merge", "jump")
+                }
+            rows.append(_row("S-V", "social", mode, program, variant, res,
+                             **extra))
+            sv_stats[(mode, program)] = res
+
+    # --- WCC: density switch vs plain push --------------------------------
+    for mode in MODES:
+        for program, variant in (("unoptimized", "basic"),
+                                 ("composed", "switch")):
+            _, res = wcc.run(pg_soc, variant=variant, mode=mode)
+            rows.append(_row("WCC", "social", mode, program, variant, res))
+
+    # --- PageRank: scatter-combine vs combined message --------------------
+    pg_web = common.partitioned("web", scale, "random",
+                                ("scatter_out", "raw_out"))
+    for mode in MODES:
+        for program, variant in (("unoptimized", "basic"),
+                                 ("composed", "scatter")):
+            _, res = pagerank.run(pg_web, iters=10, variant=variant,
+                                  mode=mode)
+            rows.append(_row("PR", "web", mode, program, variant, res))
+
+    # --- Pointer jumping: request-respond vs 2-phase direct ---------------
+    n = 1 << scale
+    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
+    pg_pj = pgraph.partition_graph(empty, common.W, "random", build=())
+    par = gen.random_tree_parents(n, seed=5)
+    for mode in MODES:
+        for program, variant in (("unoptimized", "basic"),
+                                 ("composed", "reqresp")):
+            _, res = pointer_jumping.run(pg_pj, par, variant=variant,
+                                         mode=mode)
+            rows.append(_row("PJ", "tree", mode, program, variant, res))
+
+    # --- MSF: the typed-channel stack vs monolithic Pregel ----------------
+    pg_w = common.partitioned("weighted", max(scale - 2, 6), "random",
+                              ("raw_out",))
+    for mode in MODES:
+        for program, variant in (("unoptimized", "monolithic"),
+                                 ("composed", "channels")):
+            _, res = msf.run(pg_w, variant=variant, mode=mode)
+            rows.append(_row("MSF", "weighted", mode, program, variant, res))
+
+    # --- headline check: composed S-V beats unoptimized S-V ---------------
+    basic = sv_stats[("fused", "unoptimized")]
+    comp = sv_stats[("fused", "composed")]
+    headline = {
+        "algorithm": "S-V",
+        "unoptimized_supersteps": basic.steps,
+        "composed_supersteps": comp.steps,
+        "unoptimized_bytes": basic.total_bytes,
+        "composed_bytes": comp.total_bytes,
+        "round_reduction": round(basic.steps / max(comp.steps, 1), 3),
+        "traffic_reduction": round(
+            basic.total_bytes / max(comp.total_bytes, 1), 3),
+        "composed_beats_unoptimized_rounds": comp.steps < basic.steps,
+        "composed_beats_unoptimized_bytes":
+            comp.total_bytes < basic.total_bytes,
+    }
+    print(f"\nheadline: composed S-V {headline['round_reduction']}x fewer "
+          f"global rounds, {headline['traffic_reduction']}x less traffic "
+          f"than unoptimized")
+    return rows, headline
+
+
+def run_and_write(scale: int, out_path: str = "BENCH_paper_tables.json"):
+    print(f"== Paper composition tables (scale {scale}, W={common.W}) ==")
+    rows, headline = run(scale)
+    out = {"scale": scale, "workers": common.W, "rows": rows,
+           "headline": headline}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {out_path}")
+    if not (headline["composed_beats_unoptimized_rounds"]
+            and headline["composed_beats_unoptimized_bytes"]):
+        raise SystemExit(
+            "headline regression: composed S-V did not beat the "
+            "unoptimized S-V on rounds and bytes"
+        )
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_paper_tables.json")
+    args = ap.parse_args()
+    run_and_write(args.scale, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,10 +2,14 @@
 
 Implements PageRank two ways — the standard CombinedMessage channel and
 the optimized ScatterCombine channel — exactly the one-line optimization
-switch the paper demonstrates (§III-B), and prints the traffic difference.
+switch the paper demonstrates (§III-B), and prints the traffic
+difference. The superstep loop runs under the fused on-device runtime by
+default; pass --mode host|fused|chunked to compare (docs/runtime.md).
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--scale 12] [--mode fused]
 """
+import argparse
+
 import jax.numpy as jnp
 
 from repro.core import aggregator as agg
@@ -15,7 +19,7 @@ from repro.graph import generators as gen, pgraph
 from repro.pregel import runtime
 
 
-def pagerank_step(variant):
+def pagerank_step(graph, variant):
     def step(ctx, g, state, step_idx):
         pr = state["pr"]
         deg = jnp.maximum(g.deg_out, 1).astype(jnp.float32)
@@ -38,18 +42,31 @@ def pagerank_step(variant):
     return step
 
 
-if __name__ == "__main__":
-    graph = gen.rmat(12, edge_factor=8, seed=1)           # 4096 vertices
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--mode", default="fused",
+                    choices=("host", "fused", "chunked"))
+    ap.add_argument("--chunk-size", type=int, default=8)
+    args = ap.parse_args()
+
+    graph = gen.rmat(args.scale, edge_factor=8, seed=1)
     pg = pgraph.partition_graph(graph, n_workers=8, partitioner="random",
                                 build=("scatter_out", "raw_out"))
     state0 = {"pr": jnp.where(pg.v_mask, 1.0 / graph.n, 0.0)}
 
     for variant in ("basic", "scatter"):
-        res = runtime.run_supersteps(pg, pagerank_step(variant), state0,
-                                     max_steps=20)
+        res = runtime.run_supersteps(pg, pagerank_step(graph, variant),
+                                     state0, max_steps=20, mode=args.mode,
+                                     chunk_size=args.chunk_size)
         pr = pg.to_global(res.state["pr"])
         print(f"PageRank [{variant:7s}] sum={pr.sum():.6f} "
               f"supersteps={res.steps} "
               f"traffic={res.total_bytes/1e6:.3f} MB "
-              f"({res.total_msgs} messages)")
+              f"({res.total_msgs} messages) "
+              f"mode={res.mode} dispatches={res.dispatches}")
     print("\nSwitching one channel changed the traffic, not the algorithm.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+#!/usr/bin/env bash
+# Execute every fenced ```python block in docs/*.md so the snippets
+# cannot rot. Blocks within one file are concatenated top-to-bottom and
+# run as a single script (later snippets may use earlier definitions),
+# under the tier-1 PYTHONPATH. Wired into scripts/tier1.sh (full mode).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python - "$@" <<'EOF'
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+docs = sorted(pathlib.Path("docs").glob("*.md"))
+if not docs:
+    sys.exit("docs_check: no docs/*.md found")
+
+fence = re.compile(r"^```python\s*$(.*?)^```\s*$", re.M | re.S)
+failed = False
+for doc in docs:
+    blocks = fence.findall(doc.read_text())
+    if not blocks:
+        print(f"  {doc}: no python blocks")
+        continue
+    script = "\n\n".join(b.strip("\n") for b in blocks) + "\n"
+    with tempfile.NamedTemporaryFile(
+        "w", suffix=f"_{doc.stem}.py", delete=False
+    ) as f:
+        f.write(script)
+        path = f.name
+    try:
+        proc = subprocess.run([sys.executable, path])
+    finally:
+        os.unlink(path)
+    status = "ok" if proc.returncode == 0 else "FAILED"
+    print(f"  {doc}: {len(blocks)} block(s) {status}")
+    failed |= proc.returncode != 0
+
+sys.exit(1 if failed else 0)
+EOF
+echo "docs_check: all snippets pass"

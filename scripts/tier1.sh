@@ -1,8 +1,11 @@
 #!/usr/bin/env bash
 # Tier-1 verify (see ROADMAP.md).
 #
-#   scripts/tier1.sh           full suite (~4 min on CPU)
+#   scripts/tier1.sh           full suite (~5 min on CPU): pytest, then
+#                              docs snippets (scripts/docs_check.sh) and
+#                              the examples at CI-friendly sizes
 #   scripts/tier1.sh --smoke   fast subset (<60 s): skips @pytest.mark.slow
+#                              and the docs/examples stages
 #
 # Extra args after the optional --smoke are passed through to pytest.
 set -euo pipefail
@@ -13,4 +16,13 @@ if [[ "${1:-}" == "--smoke" ]]; then
   shift
   exec python -m pytest -x -q -m "not slow" "$@"
 fi
-exec python -m pytest -x -q "$@"
+
+python -m pytest -x -q "$@"
+
+echo "== docs snippets =="
+scripts/docs_check.sh
+
+echo "== examples (CI-sized) =="
+python examples/quickstart.py --scale 9
+python examples/graph_analytics.py --scale 9 --workers 4
+echo "tier1: all stages pass"

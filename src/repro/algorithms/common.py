@@ -142,6 +142,18 @@ def cm_propagate(
     return lab, iters
 
 
+def jump_component():
+    """:func:`pj_converge` (request-respond flavor) as a composition-stack
+    component — the full-jumping stage shared by the composed S-V and the
+    typed-channel Boruvka (args ``(parents, mask)``, single stat key)."""
+    from repro.core import compose
+
+    def fn(ctx, name, parents, mask):
+        return pj_converge(ctx, parents, mask, use_reqresp=True, name=name)
+
+    return compose.Component(fn)
+
+
 def pj_converge(ctx: ChannelContext, parents, mask, *, use_reqresp=True,
                 max_iters: int = 64, name: str = "pj_loop",
                 wire_width: int = None):

@@ -9,6 +9,11 @@ pointer-jumps to the new roots, and relabels.
 Variants:
   - "channels":   typed channels — RR requests are 4-byte ids, replies are
                   4-byte labels, only the candidate messages are 4-tuples.
+                  Built as a :class:`repro.core.compose.Stacked`
+                  composition (paper §V): the five constituent channels
+                  are namespaced under ``msf/`` with per-component traffic
+                  attribution, and the stack declares its registry entry
+                  set to the runtime.
   - "monolithic": Pregel-style single message type — every message padded
                   to the largest (the 16-byte 4-tuple), no request dedup.
 
@@ -21,12 +26,26 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.algorithms import common
+from repro.core import compose
 from repro.core import message as msg
-from repro.core import request_respond as rr
 from repro.graph.pgraph import PartitionedGraph
 from repro.pregel import runtime
 
 TUPLE_W = 16  # bytes of the largest message (w, comp, src, dst)
+
+
+def typed_channels() -> compose.Stacked:
+    """The typed-channel Boruvka as one composed stack: three
+    request-respond lookups, the min-by-weight candidate combiner, and
+    the pointer-jumping fixpoint, namespaced under ``msf/``."""
+    return compose.stacked(
+        "msf",
+        nbrcomp=compose.request_component(),
+        candidate=compose.combined_component("min_by_first"),
+        cycle=compose.request_component(),
+        relabel=compose.request_component(),
+        jump=common.jump_component(),
+    )
 
 
 def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
@@ -36,11 +55,11 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
     if variant not in ("channels", "monolithic"):
         raise ValueError(variant)
     pad = None if typed else TUPLE_W
+    chan = typed_channels() if typed else None
 
     def ask(ctx, gs, dst, valid, vals, name):
         if typed:
-            return rr.request(ctx, dst, valid, vals, capacity=ctx.n_loc,
-                              name=name)
+            return chan.call(ctx, name, dst, valid, vals, capacity=ctx.n_loc)
         return common.direct_request_respond(ctx, dst, valid, vals,
                                              name=name, wire_width=pad)
 
@@ -55,9 +74,9 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
         #    requests would explode) so it asks once per vertex via a dense
         #    DirectMessage emulation — still id+pad on both wires.
         if typed:
-            nbr_comp, ovf1 = rr.request(
-                ctx, raw.dst_global, raw.mask, lab, capacity=n_loc,
-                name="nbrcomp",
+            nbr_comp, ovf1 = chan.call(
+                ctx, "nbrcomp", raw.dst_global, raw.mask, lab,
+                capacity=n_loc,
             )
         else:
             # plain Pregel sends one request per edge (no worker dedup);
@@ -80,10 +99,14 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
             ],
             axis=-1,
         )
-        minv, got, ovf2 = msg.combined_send(
-            ctx, src_comp, cross, cand, "min_by_first", capacity=n_loc,
-            name="candidate", wire_width=None if typed else pad,
-        )
+        if typed:
+            minv, got, ovf2 = chan.call(ctx, "candidate", src_comp, cross,
+                                        cand, capacity=n_loc)
+        else:
+            minv, got, ovf2 = msg.combined_send(
+                ctx, src_comp, cross, cand, "min_by_first", capacity=n_loc,
+                name="candidate", wire_width=pad,
+            )
 
         # 3. hook roots to the chosen neighbor component
         hook_to = minv[:, 1].astype(jnp.int32)
@@ -99,9 +122,12 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
         add_c = count_edge.sum().astype(jnp.int32)
 
         # 5. pointer-jump to convergence, then relabel via the new roots
-        roots, pj_iters = common.pj_converge(
-            ctx, d, gs.v_mask, use_reqresp=typed, wire_width=pad
-        )
+        if typed:
+            roots, pj_iters = chan.call(ctx, "jump", d, gs.v_mask)
+        else:
+            roots, pj_iters = common.pj_converge(
+                ctx, d, gs.v_mask, use_reqresp=False, wire_width=pad
+            )
         new_lab, ovf4 = ask(ctx, gs, lab, gs.v_mask, roots, "relabel")
         new_lab = jnp.where(gs.v_mask, new_lab, gid)
 
@@ -122,7 +148,7 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
     }
     res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
                                  backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size)
+                                 chunk_size=chunk_size, channels=chan)
     total_w = float(np.asarray(res.state["msf_w"]).sum())
     total_c = int(np.asarray(res.state["msf_cnt"]).sum())
     return {"weight": total_w, "edges": total_c,

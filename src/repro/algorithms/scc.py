@@ -14,6 +14,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.algorithms import common
+from repro.core import compose
 from repro.core import propagation as prop
 from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
@@ -53,12 +54,16 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
         alive, scc = state["alive"], state["scc"]
         gid = ctx.me() * ctx.n_loc + jnp.arange(ctx.n_loc, dtype=jnp.int32)
 
-        # trivial removal: alive in/out degree == 0 => own SCC
+        # trivial removal: alive in/out degree == 0 => own SCC. The two
+        # scatter-combines are independent, so the composition layer
+        # merges them into a single collective round (paper §V).
         alive_f = alive.astype(jnp.float32)
-        in_alive = sc.broadcast_combine(ctx, gs.scatter_out, alive_f, "sum",
-                                        name="degree/out")
-        out_alive = sc.broadcast_combine(ctx, gs.scatter_in, alive_f, "sum",
-                                         name="degree/in")
+        in_alive, out_alive = compose.fused_exchange(ctx, [
+            sc.plan_broadcast_combine(ctx, gs.scatter_out, alive_f, "sum",
+                                      name="degree/out"),
+            sc.plan_broadcast_combine(ctx, gs.scatter_in, alive_f, "sum",
+                                      name="degree/in"),
+        ])
         trivial = alive & ((in_alive == 0) | (out_alive == 0))
         scc = jnp.where(trivial, gid, scc)
         alive = alive & ~trivial

@@ -1,4 +1,6 @@
-"""Single-source shortest paths (weighted Bellman-Ford flavor).
+"""Single-source shortest paths (weighted Bellman-Ford flavor) — the
+weighted generalization of the paper's §IV-C3 propagation channel
+(`edge_transform = dist + w`), beyond the paper's min-label tables.
 
 Variants:
   - "basic": per-superstep CombinedMessage from active (improved) vertices.

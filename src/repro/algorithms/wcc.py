@@ -1,18 +1,31 @@
 """Weakly Connected Components — HCC min-label (paper Table V bottom).
 
 Variants:
-  - "basic": per-superstep CombinedMessage: changed vertices send their
-             label to all neighbors (Pregel/HCC style, O(diameter) steps).
-  - "prop":  the Propagation channel (local fixpoint between exchanges).
+  - "basic":  per-superstep CombinedMessage: changed vertices send their
+              label to all neighbors (Pregel/HCC style, O(diameter) steps).
+  - "prop":   the Propagation channel (local fixpoint between exchanges).
+  - "switch": the composition layer's density switch (paper §V,
+              ``repro.core.compose.switch_by_density``): each superstep
+              picks the ScatterCombine broadcast (dense — static plan, no
+              ids on the wire) when the active fraction is at or above
+              ``dense_threshold``, and the CombinedMessage push (sparse —
+              only changed labels travel) below it. Labels, supersteps
+              and halting are bit-identical to "basic" (min-label is
+              idempotent; re-broadcasting an unchanged label never
+              changes the minimum) — only the traffic profile moves,
+              attributed under ``wcc/dense/...`` / ``wcc/sparse/...``.
 
-The graph must be symmetrized (undirected view).
+The graph must be symmetrized (undirected view). "switch" needs both the
+``scatter_out`` and ``raw_out`` plans.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import compose
 from repro.core import message as msg
 from repro.core import propagation as prop
+from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
 from repro.pregel import runtime
 
@@ -20,7 +33,8 @@ INF32 = jnp.iinfo(jnp.int32).max
 
 
 def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
-        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64,
+        dense_threshold: float = 0.1):
     ids = pg.global_ids().astype(jnp.int32)
 
     if variant == "prop":
@@ -39,16 +53,41 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
         res = runtime.run_supersteps(pg, step, state0, max_steps=1,
                                      backend=backend, mesh=mesh, mode=mode,
                                      chunk_size=chunk_size)
-    elif variant == "basic":
+    elif variant in ("basic", "switch"):
+        # both variants share the min-label step; they differ only in the
+        # exchange that delivers neighbor labels
+
+        def exchange(ctx, gs, lab, active):
+            raw = gs.raw_out
+
+            def sparse(sub):
+                valid = raw.mask & active[raw.src_local]
+                inc, _, ovf = msg.combined_send(
+                    sub, raw.dst_global, valid, lab[raw.src_local], "min",
+                    capacity=ctx.n_loc,
+                )
+                return inc, ovf
+
+            if variant == "basic":
+                return sparse(ctx)
+
+            def dense(sub):
+                # static broadcast of every label: pads carry the identity
+                vals = jnp.where(gs.v_mask, lab, INF32)
+                inc = sc.broadcast_combine(sub, gs.scatter_out, vals, "min")
+                return inc, jnp.asarray(False)
+
+            frac = compose.global_fraction(
+                ctx, jnp.sum(active & gs.v_mask), jnp.sum(gs.v_mask)
+            )
+            result, _ = compose.switch_by_density(
+                ctx, "wcc", frac, dense_threshold, dense, sparse
+            )
+            return result
 
         def step(ctx, gs, state, step_idx):
             lab, active = state["lab"], state["active"]
-            raw = gs.raw_out
-            send_val = lab[raw.src_local]
-            valid = raw.mask & active[raw.src_local]
-            inc, got, overflow = msg.combined_send(
-                ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
-            )
+            inc, overflow = exchange(ctx, gs, lab, active)
             new = jnp.where(gs.v_mask, jnp.minimum(lab, inc), lab)
             new_active = new != lab
             halt = ~jnp.any(new_active)

@@ -1,10 +1,14 @@
-"""repro.core — the paper's contribution: composable communication channels.
+"""repro.core — the paper's contribution: composable communication channels
+(§IV channel library, §V composition; see docs/channels.md and
+docs/composition.md for the module ↔ paper-section map).
 
-Import order matters: combiners first (the kernels depend on it), then the
-channel modules (which depend on the kernels).
+Import order matters: combiners first (the kernels depend on it), then
+compose (the channel modules' exchange/fusion layer), then the channel
+modules (which depend on the kernels).
 """
 from repro.core import combiners  # noqa: F401  (must be first)
 from repro.core.channel import ChannelContext, payload_width  # noqa: F401
+from repro.core import compose  # noqa: F401  (before the channel modules)
 from repro.core import routing  # noqa: F401
 from repro.core import aggregator  # noqa: F401
 from repro.core import message  # noqa: F401

@@ -1,4 +1,5 @@
-"""Channel base machinery: per-step context, registry, message accounting.
+"""Channel base machinery: per-step context, registry, message accounting
+(paper §IV — the channel interface every §IV-C optimization implements).
 
 The paper's ``Channel`` base class exposes serialize()/deserialize() hooks
 around raw per-peer byte buffers. In the SPMD adaptation a channel is a
@@ -36,6 +37,13 @@ import jax.numpy as jnp
 # carries stay cheap, and cross-superstep totals are accumulated host-side
 # in Python ints (arbitrary precision) at chunk boundaries.
 TRAFFIC_DTYPE = jnp.int32
+
+
+def key_under(key: str, prefix: str) -> bool:
+    """Whether a "/"-namespaced stat key belongs to ``prefix`` (exact
+    match or nested below it) — the single definition of the namespace
+    convention used by registry/RunResult/compose prefix views."""
+    return key == prefix or key.startswith(prefix + "/")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,6 +85,21 @@ class ChannelRegistry:
             shapes={n: tuple(shape) for n in names},
             dtypes={n: jnp.dtype(dtype) for n in names},
         )
+
+    # -- namespaced keys (composition layer, repro.core.compose) ----------
+    #
+    # Composed channels account traffic under "/"-separated names like
+    # "sv/pointer/request"; the registry treats these as ordinary opaque
+    # keys (the fused carry doesn't care), and offers prefix views so a
+    # run's stats can be attributed per composed component.
+
+    def under(self, prefix: str) -> Tuple[str, ...]:
+        """Registered names belonging to ``prefix`` (exact or nested)."""
+        return tuple(n for n in self.names if key_under(n, prefix))
+
+    def prefixes(self) -> Tuple[str, ...]:
+        """Distinct top-level namespaces across the registered names."""
+        return tuple(sorted({n.split("/", 1)[0] for n in self.names}))
 
 
 @dataclasses.dataclass

@@ -1,8 +1,10 @@
-"""Combiners — associative/commutative reduction operators for channels.
+"""Combiners — associative/commutative reduction operators for channels
+(paper Table I; the per-channel combiner parameter of every §IV-C channel).
 
 The paper attaches a combiner to each channel independently (unlike Pregel's
-single global combiner); every optimized channel in this library is
-parameterized by one of these.
+single global combiner, which Table IV shows is inapplicable to
+heterogeneous-message programs); every optimized channel in this library
+is parameterized by one of these.
 """
 from __future__ import annotations
 

@@ -1,4 +1,5 @@
-"""Dynamic sort-based message routing (the TPU stand-in for hash routing).
+"""Dynamic sort-based message routing (the TPU stand-in for hash routing)
+— the exchange beneath the paper's standard message channels (Table I).
 
 Messages are (destination-global-id, payload) pairs with a validity mask.
 Routing sorts by destination, buckets by owner (contiguous in the sorted

@@ -6,6 +6,12 @@ the edges once (sorted by destination, sender-side dedup to one slot per
 unique destination per worker, positional receive tables) so that each
 superstep is: gather → sorted-segment combine (Pallas kernel on TPU) →
 one all_to_all with **no vertex ids on the wire** → receive-side combine.
+
+The exchange is exposed in two forms: :func:`broadcast_combine` performs
+the whole superstep, while :func:`plan_broadcast_combine` returns a
+``PlannedExchange`` split at the collective boundary so the composition
+layer (``repro.core.compose.fused_exchange``, paper §V) can merge several
+independent channels' exchanges into one collective round.
 """
 from __future__ import annotations
 
@@ -15,9 +21,70 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import combiners as cb
+from repro.core import compose
 from repro.core.channel import TRAFFIC_DTYPE, ChannelContext
 from repro.graph.pgraph import ScatterPlan
 from repro.kernels import ops as kops
+
+
+def plan_broadcast_combine(
+    ctx: ChannelContext,
+    plan: ScatterPlan,
+    vertex_vals: jax.Array,
+    combiner,
+    *,
+    edge_transform: Optional[Callable] = None,
+    use_kernel: Optional[bool] = None,
+    name: str = "scatter_combine",
+) -> compose.PlannedExchange:
+    """Stage one scatter-combine superstep up to (but not including) the
+    collective; see :func:`broadcast_combine` for argument semantics.
+
+    Returns a ``PlannedExchange`` whose payload is the packed positional
+    ``(W, C, D)`` send buffer and whose ``finish`` performs the
+    receive-side combine. Execute it — alone or merged with other
+    channels' planned exchanges — via ``compose.fused_exchange``.
+    """
+    combiner = cb.get(combiner)
+    w, c = ctx.num_workers, plan.slot_cap
+    squeeze = vertex_vals.ndim == 1
+    vals = vertex_vals[:, None] if squeeze else vertex_vals
+    d = vals.shape[-1]
+    ident = combiner.ident_for(vals.dtype)
+
+    # 1. per-edge values (gather by local src; padded edges dropped via seg id)
+    per_edge = vals[plan.edge_src]
+    if edge_transform is not None:
+        per_edge = edge_transform(per_edge, plan.edge_w)
+
+    # 2. sender-side combine: one value per unique destination (sorted ids)
+    u_vals = kops.segment_combine(
+        per_edge, plan.edge_seg, plan.u_cap, combiner,
+        use_kernel=use_kernel, assume_sorted=True,
+    )
+
+    # 3. positional pack (payload only — the routing is static)
+    buf = jnp.full((w * c + 1, d), ident, vals.dtype)
+    buf = buf.at[plan.pack_slot].set(u_vals, mode="drop")
+    send = buf[: w * c].reshape(w, c, d)
+
+    # 4. (deferred) receive-side combine into dense per-vertex values
+    def finish(recv):
+        out = kops.segment_combine(
+            recv["v"].reshape(w * c, d), plan.recv_local.reshape(-1),
+            ctx.n_loc, combiner, use_kernel=False,
+        )
+        return out[:, 0] if squeeze else out
+
+    me = ctx.me()
+    remote = (plan.send_count.sum() - plan.send_count[me]).astype(TRAFFIC_DTYPE)
+    return compose.PlannedExchange(
+        name=name,
+        payload={"v": send},
+        finish=finish,
+        nbytes=remote * d * jnp.dtype(vals.dtype).itemsize,
+        nmsgs=remote,
+    )
 
 
 def broadcast_combine(
@@ -42,38 +109,9 @@ def broadcast_combine(
       (n_loc,) or (n_loc, D) combined incoming value per local vertex
       (combiner identity where nothing arrived).
     """
-    combiner = cb.get(combiner)
-    w, c = ctx.num_workers, plan.slot_cap
-    squeeze = vertex_vals.ndim == 1
-    vals = vertex_vals[:, None] if squeeze else vertex_vals
-    d = vals.shape[-1]
-    ident = combiner.ident_for(vals.dtype)
-
-    # 1. per-edge values (gather by local src; padded edges dropped via seg id)
-    per_edge = vals[plan.edge_src]
-    if edge_transform is not None:
-        per_edge = edge_transform(per_edge, plan.edge_w)
-
-    # 2. sender-side combine: one value per unique destination (sorted ids)
-    u_vals = kops.segment_combine(
-        per_edge, plan.edge_seg, plan.u_cap, combiner,
-        use_kernel=use_kernel, assume_sorted=True,
+    planned = plan_broadcast_combine(
+        ctx, plan, vertex_vals, combiner,
+        edge_transform=edge_transform, use_kernel=use_kernel, name=name,
     )
-
-    # 3. positional pack + all_to_all (payload only — the routing is static)
-    buf = jnp.full((w * c + 1, d), ident, vals.dtype)
-    buf = buf.at[plan.pack_slot].set(u_vals, mode="drop")
-    recv = jax.lax.all_to_all(
-        buf[: w * c].reshape(w, c, d), ctx.axis, 0, 0, tiled=True
-    )
-
-    # 4. receive-side combine into dense per-vertex values
-    out = kops.segment_combine(
-        recv.reshape(w * c, d), plan.recv_local.reshape(-1), ctx.n_loc, combiner,
-        use_kernel=False,
-    )
-
-    me = ctx.me()
-    remote = (plan.send_count.sum() - plan.send_count[me]).astype(TRAFFIC_DTYPE)
-    ctx.add_traffic(name, remote * d * jnp.dtype(vals.dtype).itemsize, remote)
-    return out[:, 0] if squeeze else out
+    (out,) = compose.fused_exchange(ctx, [planned])
+    return out

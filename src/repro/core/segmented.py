@@ -1,9 +1,12 @@
-"""Generic segmented reduction for custom (non-lattice) combiners.
+"""Generic segmented reduction for custom (non-lattice) combiners —
+supports the sender/receiver-side combines of the paper's §IV-C1
+scatter-combine channel and the heterogeneous combiners of Table IV.
 
 ``jax.ops.segment_*`` covers sum/min/max; channels also allow arbitrary
 associative+commutative combiners (e.g. min-by-key with payload, used by
-Boruvka MSF). This implements the same segmented Hillis-Steele scan the
-Pallas kernel uses, in pure jnp, over sorted segment ids.
+Boruvka MSF, paper Table IV). This implements the same segmented
+Hillis-Steele scan the Pallas kernel uses, in pure jnp, over sorted
+segment ids.
 
 Shape-static by construction (the scan ladder depends only on M), so it
 is safe inside the fused runtime's ``lax.while_loop``/``lax.scan`` body.

@@ -36,14 +36,14 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregator
-from repro.core.channel import ChannelContext, ChannelRegistry
+from repro.core.channel import ChannelContext, ChannelRegistry, key_under
 from repro.graph.pgraph import PartitionedGraph
 
 AXIS = "workers"
@@ -76,6 +76,18 @@ class RunResult:
     @property
     def total_msgs(self) -> int:
         return int(sum(self.msgs_by_channel.values()))
+
+    # -- namespaced (composed-channel) attribution helpers ----------------
+
+    def bytes_under(self, prefix: str) -> int:
+        """Total bytes accounted under a namespaced key prefix."""
+        return int(sum(v for k, v in self.bytes_by_channel.items()
+                       if key_under(k, prefix)))
+
+    def msgs_under(self, prefix: str) -> int:
+        """Total messages accounted under a namespaced key prefix."""
+        return int(sum(v for k, v in self.msgs_by_channel.items()
+                       if key_under(k, prefix)))
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -110,7 +122,7 @@ def run_supersteps(
     check_overflow: bool = True,
     mode: Optional[str] = None,
     chunk_size: int = 64,
-    channels: Optional[Sequence[str]] = None,
+    channels: Optional[Any] = None,
 ) -> RunResult:
     """Run `step_fn(ctx, graph_shard, state_shard, step)` to halt.
 
@@ -119,8 +131,11 @@ def run_supersteps(
     third element `overflow` (bool) which the runtime surfaces as an error.
 
     mode: "fused" (default), "chunked", or "host" — see module docstring.
-    channels: optional explicit channel-name declaration; validated
-      against the dry-trace discovery (a mismatch is a programming error).
+    channels: optional explicit channel declaration, validated against
+      the dry-trace discovery (a mismatch is a programming error). Either
+      a sequence of stat-key names, a composed channel (any object with
+      ``channel_names()``, e.g. ``repro.core.compose.Stacked``), or a
+      mixed sequence of both.
     """
     W, n_loc = graph.num_workers, graph.n_loc
     if mode is None:
@@ -171,7 +186,9 @@ def run_supersteps(
         _, _, _, bytes_struct, _ = out_struct
         registry = ChannelRegistry.from_stats_structure(bytes_struct)
         if channels is not None:
-            declared = tuple(sorted(channels))
+            from repro.core import compose
+
+            declared = tuple(sorted(compose.channel_names_of(channels)))
             if declared != registry.names:
                 raise ValueError(
                     f"declared channels {declared} != traced channels "

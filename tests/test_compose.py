@@ -1,0 +1,226 @@
+"""Composition-layer tests (repro.core.compose, paper §V).
+
+Covers: composed S-V parity (bit-identical final states vs. the
+unoptimized S-V, across all three execution modes), namespaced traffic
+attribution (component stats sum to the run totals and match the
+individual channels run standalone), fused_exchange equivalence to
+separate collectives, the density switch, and composed-registry
+declaration through ``run_supersteps(channels=<stack>)``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms import sv, wcc
+from repro.core import compose
+from repro.core import scatter_combine as sc
+from repro.core.channel import ChannelContext
+from repro.graph import generators as gen, pgraph
+from repro.pregel import runtime
+
+MODES = ("host", "fused", "chunked")
+
+
+@pytest.fixture(scope="module")
+def pg_small():
+    g = gen.rmat(8, edge_factor=4, seed=11).symmetrized()
+    return pgraph.partition_graph(
+        g, 4, "random", build=("scatter_out", "scatter_in", "prop_out",
+                               "raw_out")
+    )
+
+
+# ---------------------------------------------------------------------------
+# composed S-V
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_composed_sv_parity_all_modes(pg_small):
+    """Composed S-V == unoptimized S-V final states, in every mode."""
+    lab_basic, _ = sv.run(pg_small, variant="basic")
+    for mode in MODES:
+        lab, res = sv.run(pg_small, variant="composed", mode=mode,
+                          chunk_size=3)
+        np.testing.assert_array_equal(lab_basic, lab)
+        assert res.halted
+
+
+@pytest.mark.slow
+def test_composed_sv_mode_parity_traffic(pg_small):
+    """Namespaced stats are themselves mode-invariant (bit-identical)."""
+    results = {m: sv.run(pg_small, variant="composed", mode=m, chunk_size=3)[1]
+               for m in MODES}
+    ref = results["host"]
+    for mode in ("fused", "chunked"):
+        r = results[mode]
+        assert r.steps == ref.steps
+        assert r.bytes_by_channel == ref.bytes_by_channel
+        assert r.msgs_by_channel == ref.msgs_by_channel
+
+
+def test_composed_sv_namespaced_attribution(pg_small):
+    """Every stat key lives under sv/, per-component sums equal the run
+    totals, and the prefix helpers agree with manual slicing."""
+    _, res = sv.run(pg_small, variant="composed")
+    chan = sv.composed_channels()
+    assert tuple(sorted(res.bytes_by_channel)) == chan.channel_names()
+    assert all(k.startswith("sv/") for k in res.bytes_by_channel)
+    grouped = compose.group_stats(res.bytes_by_channel)
+    assert set(grouped) == {"sv"}
+    assert grouped["sv"] == res.total_bytes
+    per_component = sum(
+        res.bytes_under(f"sv/{key}") for key in chan.components
+    )
+    assert per_component == res.total_bytes
+    # request-respond contributes both of its wires
+    assert res.bytes_under("sv/pointer") == (
+        res.bytes_by_channel["sv/pointer/request"]
+        + res.bytes_by_channel["sv/pointer/respond"]
+    )
+
+
+@pytest.mark.slow
+def test_composed_sv_beats_unoptimized(pg_small):
+    """The acceptance property: composed <= unoptimized on global rounds
+    and strictly less traffic."""
+    _, res_basic = sv.run(pg_small, variant="basic")
+    _, res_comp = sv.run(pg_small, variant="composed")
+    assert res_comp.steps <= res_basic.steps
+    assert res_comp.total_bytes < res_basic.total_bytes
+
+
+def test_stacked_declaration_mismatch_raises(pg_small):
+    """A composed declaration that doesn't match the trace is an error."""
+    chan = sv.composed_channels()
+    wrong = compose.stacked("sv", pointer=chan.components["pointer"])
+    with pytest.raises(ValueError, match="declared channels"):
+        runtime.run_supersteps(
+            pg_small, sv._composed_step(chan),
+            {"D": pg_small.global_ids().astype(jnp.int32)},
+            max_steps=2, channels=wrong,
+        )
+
+
+# ---------------------------------------------------------------------------
+# fused_exchange
+# ---------------------------------------------------------------------------
+
+
+def test_fused_exchange_matches_separate_collectives(pg_small):
+    """Merging two scatter-combines into one collective round changes
+    neither the results nor the per-channel accounting."""
+    vals = jnp.where(pg_small.v_mask, pg_small.deg_out, 0).astype(jnp.float32)
+
+    def step_fused(ctx, gs, state, i):
+        a, b = compose.fused_exchange(ctx, [
+            sc.plan_broadcast_combine(ctx, gs.scatter_out, state["x"], "sum",
+                                      name="a"),
+            sc.plan_broadcast_combine(ctx, gs.scatter_in, state["x"], "min",
+                                      name="b"),
+        ])
+        return {"x": state["x"], "a": a, "b": b}, True
+
+    def step_separate(ctx, gs, state, i):
+        a = sc.broadcast_combine(ctx, gs.scatter_out, state["x"], "sum",
+                                 name="a")
+        b = sc.broadcast_combine(ctx, gs.scatter_in, state["x"], "min",
+                                 name="b")
+        return {"x": state["x"], "a": a, "b": b}, True
+
+    z = jnp.zeros_like(vals)
+    state0 = {"x": vals, "a": z, "b": z}
+    r_f = runtime.run_supersteps(pg_small, step_fused, state0, max_steps=1)
+    r_s = runtime.run_supersteps(pg_small, step_separate, state0, max_steps=1)
+    np.testing.assert_array_equal(np.asarray(r_f.state["a"]),
+                                  np.asarray(r_s.state["a"]))
+    np.testing.assert_array_equal(np.asarray(r_f.state["b"]),
+                                  np.asarray(r_s.state["b"]))
+    assert r_f.bytes_by_channel == r_s.bytes_by_channel
+    assert r_f.msgs_by_channel == r_s.msgs_by_channel
+
+
+def test_fused_exchange_mixed_dtypes():
+    """Leaves group by dtype: one collective per dtype, results exact."""
+    W = 4
+
+    def shard(x_i, x_f):
+        ctx = ChannelContext("w", W, 4)
+        (ri, rf) = compose.fused_exchange(ctx, [
+            compose.PlannedExchange("ints", {"v": x_i}, lambda r: r["v"],
+                                    0, 0),
+            compose.PlannedExchange("floats", {"v": x_f}, lambda r: r["v"],
+                                    0, 0),
+        ])
+        return ri, rf
+
+    rng = np.random.default_rng(0)
+    x_i = rng.integers(0, 100, (W, W, 3)).astype(np.int32)
+    x_f = rng.normal(size=(W, W, 2, 2)).astype(np.float32)
+    ri, rf = jax.vmap(shard, axis_name="w")(jnp.asarray(x_i),
+                                            jnp.asarray(x_f))
+    # all_to_all semantics: out[p][q] = in[q][p]
+    np.testing.assert_array_equal(np.asarray(ri), x_i.swapaxes(0, 1))
+    np.testing.assert_array_equal(np.asarray(rf), x_f.swapaxes(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# switch_by_density
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", MODES)
+def test_wcc_switch_parity(pg_small, mode):
+    """The density switch never changes labels, steps, or halting."""
+    lab_b, res_b = wcc.run(pg_small, variant="basic")
+    lab_s, res_s = wcc.run(pg_small, variant="switch", mode=mode,
+                           chunk_size=3)
+    np.testing.assert_array_equal(lab_b, lab_s)
+    assert (res_s.steps, res_s.halted) == (res_b.steps, res_b.halted)
+
+
+def test_switch_accounts_only_chosen_branch(pg_small):
+    """Forced thresholds: the unchosen branch's traffic is masked to 0."""
+    _, res_dense = wcc.run(pg_small, variant="switch", dense_threshold=0.0)
+    assert res_dense.bytes_under("wcc/dense") > 0
+    assert res_dense.bytes_under("wcc/sparse") == 0
+    _, res_sparse = wcc.run(pg_small, variant="switch", dense_threshold=1.1)
+    assert res_sparse.bytes_under("wcc/sparse") > 0
+    assert res_sparse.bytes_under("wcc/dense") == 0
+    # both branches' keys exist in every run (registry contract)
+    for res in (res_dense, res_sparse):
+        assert "wcc/dense/scatter_combine" in res.bytes_by_channel
+        assert "wcc/sparse/combined_message" in res.bytes_by_channel
+
+
+def test_switch_dense_between_sparse_totals(pg_small):
+    """A mid threshold starts dense and finishes sparse."""
+    _, res = wcc.run(pg_small, variant="switch", dense_threshold=0.5)
+    assert res.bytes_under("wcc/dense") > 0
+    assert res.bytes_under("wcc/sparse") > 0
+
+
+# ---------------------------------------------------------------------------
+# scoped accounting primitives
+# ---------------------------------------------------------------------------
+
+
+def test_scoped_merge_and_select():
+    ctx = ChannelContext("w", 2, 4)
+    with compose.scoped(ctx, "outer") as sub:
+        sub.add_traffic("inner", 10, 1)
+    with compose.scoped(ctx, "masked", select=0) as sub:
+        sub.add_traffic("inner", 10, 1)
+    assert int(ctx.stats_bytes["outer/inner"]) == 10
+    assert int(ctx.stats_bytes["masked/inner"]) == 0
+    assert int(ctx.stats_msgs["masked/inner"]) == 0
+
+
+def test_channel_names_of_mixed_sequence():
+    chan = sv.composed_channels()
+    names = compose.channel_names_of([chan, "extra"])
+    assert "extra" in names
+    assert set(chan.channel_names()) <= set(names)
+    # a bare string is a single declaration, not a char sequence
+    assert compose.channel_names_of("scatter_combine") == ("scatter_combine",)
