@@ -12,6 +12,14 @@ paper's headline §V case study — the composed program must win on BOTH
 global rounds and traffic bytes, and the emitted JSON
 (``BENCH_paper_tables.json``) records that check under ``"headline"``.
 
+The whole table is driven by the program registry
+(``repro.algorithms.REGISTRY``) through one compile-once
+``repro.pregel.engine.Engine`` per execution mode: each (program, shape)
+is compiled at most once per mode, a warm re-run of the composed S-V
+demonstrates the session cache (``"engine"`` in the JSON records the
+compile/cache-hit counters), and there is no per-algorithm glue — a row
+is just (label, registry key, knobs).
+
 Wall times on CPU-sized graphs are dominated by per-superstep dispatch,
 which is what the fused column shows; traffic and round counts are exact
 and scale-invariant (the channels count logical remote bytes, as the
@@ -22,28 +30,60 @@ from __future__ import annotations
 import argparse
 import json
 
-import numpy as np
-
 from benchmarks import common
-from repro.algorithms import msf, pagerank, pointer_jumping, sv, wcc
-from repro.graph import generators as gen, pgraph
+from repro.algorithms import REGISTRY
+from repro.graph import pgraph
+from repro.pregel.engine import Engine
 
 MODES = ("host", "fused")
 
+# (algorithm row label, paper dataset, [(program label, registry key,
+# factory knobs)]). The composed S-V also reports per-component bytes.
+CASES = (
+    ("S-V", "social",
+     (("unoptimized", "sv:basic", {}), ("composed", "sv:composed", {}))),
+    ("WCC", "social",
+     (("unoptimized", "wcc:basic", {}), ("composed", "wcc:switch", {}))),
+    ("PR", "web",
+     (("unoptimized", "pagerank:basic", {"iters": 10}),
+      ("composed", "pagerank:scatter", {"iters": 10}))),
+    ("PJ", "tree",
+     (("unoptimized", "pj:basic", {}), ("composed", "pj:reqresp", {}))),
+    ("MSF", "weighted",
+     (("unoptimized", "msf:monolithic", {}),
+      ("composed", "msf:channels", {}))),
+)
 
-def _row(algorithm, dataset, mode, program, variant, res, **extra):
+
+def _instance(spec, dataset: str, scale: int):
+    """Problem instance for a row: the paper stand-in datasets for the
+    graph algorithms, the spec's own generator for the forest (PJ)."""
+    if dataset == "tree":
+        graph = spec.make_graph(scale, 0)
+        pg = pgraph.partition_graph(graph, common.W, "random",
+                                    build=spec.build)
+    else:
+        s = max(scale - 2, 6) if spec.algorithm == "msf" else scale
+        graph = common.dataset(dataset, s)
+        pg = common.partitioned(dataset, s, "random", spec.build)
+    return graph, pg, spec.inputs(graph, 0)
+
+
+def _row(algorithm, dataset, mode, program, res, **extra):
     row = {
         "algorithm": algorithm,
         "dataset": dataset,
         "mode": mode,
         "program": program,
-        "variant": variant,
+        "variant": res.program,
         "supersteps": res.steps,
         "messages": res.total_msgs,
         "bytes": res.total_bytes,
         "wall_time_s": round(res.wall_time_s, 4),
         "runtime_s": round(common.adjusted_runtime(res), 4),
         "dispatches": res.dispatches,
+        "compile_time_s": round(res.compile_time_s, 4),
+        "cache_hit": res.cache_hit,
     }
     row.update(extra)
     print(f"  {algorithm:4s} {program:12s} [{mode:5s}] "
@@ -53,63 +93,48 @@ def _row(algorithm, dataset, mode, program, variant, res, **extra):
 
 
 def run(scale: int):
+    engines = {m: Engine(mode=m) for m in MODES}
     rows = []
-
-    # --- S-V: the headline composition (paper §V / Table VI) -------------
-    pg_soc = common.partitioned("social", scale, "random",
-                                ("scatter_out", "prop_out", "raw_out"))
     sv_stats = {}
-    for mode in MODES:
-        for program, variant in (("unoptimized", "basic"),
-                                 ("composed", "composed")):
-            _, res = sv.run(pg_soc, variant=variant, mode=mode)
-            extra = {}
-            if variant == "composed":
-                extra["bytes_by_component"] = {
-                    k: res.bytes_under(f"sv/{k}")
-                    for k in ("pointer", "neighbor_min", "merge", "jump")
-                }
-            rows.append(_row("S-V", "social", mode, program, variant, res,
-                             **extra))
-            sv_stats[(mode, program)] = res
+    progs = {}
 
-    # --- WCC: density switch vs plain push --------------------------------
-    for mode in MODES:
-        for program, variant in (("unoptimized", "basic"),
-                                 ("composed", "switch")):
-            _, res = wcc.run(pg_soc, variant=variant, mode=mode)
-            rows.append(_row("WCC", "social", mode, program, variant, res))
+    pg_by_algorithm = {}
+    for algorithm, dataset, programs in CASES:
+        # one problem instance per case — shared by every (mode, program)
+        graph, pg, inputs = _instance(REGISTRY[programs[0][1]], dataset,
+                                      scale)
+        pg_by_algorithm[algorithm] = pg
+        for mode in MODES:
+            for label, key, knobs in programs:
+                spec = REGISTRY[key]
+                # one program instance per (key, knobs) across both modes
+                if key not in progs:
+                    progs[key] = spec.factory(**inputs, **knobs)
+                res = engines[mode].run(progs[key], pg)
+                extra = {}
+                if key == "sv:composed":
+                    extra["bytes_by_component"] = {
+                        k: res.bytes_under(f"sv/{k}")
+                        for k in ("pointer", "neighbor_min", "merge", "jump")
+                    }
+                rows.append(_row(algorithm, dataset, mode, label, res,
+                                 **extra))
+                if algorithm == "S-V":
+                    sv_stats[(mode, label)] = res
 
-    # --- PageRank: scatter-combine vs combined message --------------------
-    pg_web = common.partitioned("web", scale, "random",
-                                ("scatter_out", "raw_out"))
-    for mode in MODES:
-        for program, variant in (("unoptimized", "basic"),
-                                 ("composed", "scatter")):
-            _, res = pagerank.run(pg_web, iters=10, variant=variant,
-                                  mode=mode)
-            rows.append(_row("PR", "web", mode, program, variant, res))
-
-    # --- Pointer jumping: request-respond vs 2-phase direct ---------------
-    n = 1 << scale
-    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
-    pg_pj = pgraph.partition_graph(empty, common.W, "random", build=())
-    par = gen.random_tree_parents(n, seed=5)
-    for mode in MODES:
-        for program, variant in (("unoptimized", "basic"),
-                                 ("composed", "reqresp")):
-            _, res = pointer_jumping.run(pg_pj, par, variant=variant,
-                                         mode=mode)
-            rows.append(_row("PJ", "tree", mode, program, variant, res))
-
-    # --- MSF: the typed-channel stack vs monolithic Pregel ----------------
-    pg_w = common.partitioned("weighted", max(scale - 2, 6), "random",
-                              ("raw_out",))
-    for mode in MODES:
-        for program, variant in (("unoptimized", "monolithic"),
-                                 ("composed", "channels")):
-            _, res = msf.run(pg_w, variant=variant, mode=mode)
-            rows.append(_row("MSF", "weighted", mode, program, variant, res))
+    # --- session cache demo: warm re-run of the composed S-V -------------
+    warm = engines["fused"].run(progs["sv:composed"], pg_by_algorithm["S-V"])
+    assert warm.cache_hit, "same program+shape must reuse the compile"
+    engine_stats = {m: engines[m].stats() for m in MODES}
+    engine_stats["warm_rerun"] = {
+        "program": warm.program,
+        "cache_hit": warm.cache_hit,
+        "wall_time_s": round(warm.wall_time_s, 4),
+        "cold_wall_time_s": sv_stats[("fused", "composed")].wall_time_s,
+        "cold_compile_time_s": round(
+            sv_stats[("fused", "composed")].compile_time_s, 4),
+    }
+    print(f"\nengine sessions: {engine_stats}")
 
     # --- headline check: composed S-V beats unoptimized S-V ---------------
     basic = sv_stats[("fused", "unoptimized")]
@@ -127,17 +152,17 @@ def run(scale: int):
         "composed_beats_unoptimized_bytes":
             comp.total_bytes < basic.total_bytes,
     }
-    print(f"\nheadline: composed S-V {headline['round_reduction']}x fewer "
+    print(f"headline: composed S-V {headline['round_reduction']}x fewer "
           f"global rounds, {headline['traffic_reduction']}x less traffic "
           f"than unoptimized")
-    return rows, headline
+    return rows, headline, engine_stats
 
 
 def run_and_write(scale: int, out_path: str = "BENCH_paper_tables.json"):
     print(f"== Paper composition tables (scale {scale}, W={common.W}) ==")
-    rows, headline = run(scale)
+    rows, headline, engine_stats = run(scale)
     out = {"scale": scale, "workers": common.W, "rows": rows,
-           "headline": headline}
+           "headline": headline, "engine": engine_stats}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

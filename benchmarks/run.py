@@ -47,6 +47,9 @@ def main() -> None:
         print()
         superstep_fusion.run_and_write(scale + 1)
 
+    print("\nengine session (compile-once across tables):",
+          tables.session_stats())
+
     print("\n== CSV ==")
     common.print_csv()
     if args.csv:

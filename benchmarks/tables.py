@@ -1,12 +1,40 @@
-"""One benchmark per paper table (IV, V-top/mid/bottom, VI, VII)."""
+"""One benchmark per paper table (IV, V-top/mid/bottom, VI, VII).
+
+All tables run registry programs (``repro.algorithms.REGISTRY``) through
+one shared compile-once ``Engine`` session: a program recurring across
+tables on a same-shape graph (e.g. PageRank in Tables IV and V-top, or
+any table's repeated mono-vs-basic rows) reuses its executable instead
+of re-tracing — ``session_stats()`` reports what the whole sweep paid.
+(PJ programs close over their forest, so tree-vs-chain rows are genuinely
+different programs; repeated rows on the *same* forest still hit.)
+"""
 from __future__ import annotations
 
 import numpy as np
 
 from benchmarks import common
-from repro.algorithms import (msf, pagerank, pointer_jumping, scc, sssp, sv,
-                              wcc)
+from repro.algorithms import REGISTRY, get_program
 from repro.graph import generators as gen, pgraph
+from repro.pregel.engine import Engine
+
+# one compile-once session for every table in a benchmark run
+ENGINE = Engine()
+
+
+def session_stats():
+    return ENGINE.stats()
+
+
+def _run(key: str, pg, **knobs):
+    # get_program memoizes array knobs (PJ parents) by identity, so a
+    # repeated row on the same forest shares program AND executable
+    return ENGINE.run(get_program(key, **knobs), pg)
+
+
+def _forest(scale: int):
+    n = 1 << scale
+    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
+    return n, pgraph.partition_graph(empty, common.W, "random", build=())
 
 
 def table4_basic_channels(scale: int):
@@ -19,37 +47,33 @@ def table4_basic_channels(scale: int):
     """
     print("\n== Table IV: basic channels vs monolithic Pregel ==")
     pg_web = common.partitioned("web", scale, "random",
-                                ("scatter_out", "raw_out"))
-    for name, variant in [("pregel (mono)", "basic"),
-                          ("channel (basic)", "basic")]:
-        _, res = pagerank.run(pg_web, iters=10, variant=variant)
+                                REGISTRY["pagerank:basic"].build)
+    for name in ("pregel (mono)", "channel (basic)"):
+        res = _run("pagerank:basic", pg_web, iters=10)
         common.emit("IV", f"PR {name}", "web", res)
 
     pg_soc = common.partitioned("social", scale, "random",
-                                ("scatter_out", "prop_out", "raw_out"))
-    for name, variant in [("pregel (mono)", "basic"),
-                          ("channel (basic)", "basic")]:
-        _, res = wcc.run(pg_soc, variant=variant)
+                                REGISTRY["wcc:basic"].build)
+    for name in ("pregel (mono)", "channel (basic)"):
+        res = _run("wcc:basic", pg_soc)
         common.emit("IV", f"WCC {name}", "social", res)
 
-    n = 1 << scale
-    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
-    pg_pj = pgraph.partition_graph(empty, common.W, "random", build=())
+    n, pg_pj = _forest(scale)
     par = gen.parent_chain(n, seed=3)
-    for name, variant in [("pregel (mono)", "basic"),
-                          ("channel (basic)", "basic")]:
-        _, res = pointer_jumping.run(pg_pj, par, variant=variant)
+    for name in ("pregel (mono)", "channel (basic)"):
+        res = _run("pj:basic", pg_pj, parents=par)
         common.emit("IV", f"PJ {name}", "chain", res)
 
-    for name, variant in [("pregel (mono)", "monolithic"),
-                          ("channel (basic)", "basic")]:
-        _, res = sv.run(pg_soc, variant=variant)
+    for name, key in (("pregel (mono)", "sv:monolithic"),
+                      ("channel (basic)", "sv:basic")):
+        res = _run(key, pg_soc)
         common.emit("IV", f"S-V {name}", "social", res)
 
-    pg_w = common.partitioned("weighted", scale - 1, "random", ("raw_out",))
-    for name, variant in [("pregel (mono)", "monolithic"),
-                          ("channel (typed)", "channels")]:
-        out, res = msf.run(pg_w, variant=variant)
+    pg_w = common.partitioned("weighted", scale - 1, "random",
+                              REGISTRY["msf:channels"].build)
+    for name, key in (("pregel (mono)", "msf:monolithic"),
+                      ("channel (typed)", "msf:channels")):
+        res = _run(key, pg_w)
         common.emit("IV", f"MSF {name}", "weighted", res)
 
 
@@ -58,24 +82,22 @@ def table5_scatter_combine(scale: int):
     print("\n== Table V (top): scatter-combine channel on PageRank ==")
     for ds in ("web", "social_dense"):
         pg = common.partitioned(ds, scale, "random",
-                                ("scatter_out", "raw_out"))
-        for name, variant in [("channel (basic)", "basic"),
-                              ("channel (scatter)", "scatter")]:
-            _, res = pagerank.run(pg, iters=10, variant=variant)
+                                REGISTRY["pagerank:basic"].build)
+        for name, key in (("channel (basic)", "pagerank:basic"),
+                          ("channel (scatter)", "pagerank:scatter")):
+            res = _run(key, pg, iters=10)
             common.emit("V-top", f"PR {name}", ds, res)
 
 
 def table5_request_respond(scale: int):
     """Table V middle: Pointer-Jumping, DirectMessage vs RequestRespond."""
     print("\n== Table V (mid): request-respond channel on PJ ==")
-    n = 1 << scale
-    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
-    pg = pgraph.partition_graph(empty, common.W, "random", build=())
+    n, pg = _forest(scale)
     for ds, par in [("tree", gen.random_tree_parents(n, seed=5)),
                     ("chain", gen.parent_chain(n, seed=5))]:
-        for name, variant in [("channel (basic)", "basic"),
-                              ("channel (reqresp)", "reqresp")]:
-            _, res = pointer_jumping.run(pg, par, variant=variant)
+        for name, key in (("channel (basic)", "pj:basic"),
+                          ("channel (reqresp)", "pj:reqresp")):
+            res = _run(key, pg, parents=par)
             common.emit("V-mid", f"PJ {name}", ds, res)
 
 
@@ -88,11 +110,11 @@ def table5_propagation(scale: int):
                           ("social", "random", "social"),
                           ("social", "bfs", "social (P)")]:
         pg = common.partitioned(ds, scale, part, ("prop_out", "raw_out"))
-        for name, variant in [("channel (basic)", "basic"),
-                              ("channel (prop)", "prop")]:
-            _, res = wcc.run(pg, variant=variant)
+        for name, key in (("channel (basic)", "wcc:basic"),
+                          ("channel (prop)", "wcc:prop")):
+            res = _run(key, pg)
             extra = {}
-            if variant == "prop":
+            if key == "wcc:prop":
                 info = np.asarray(res.state["info"])
                 extra = {"global_rounds": int(info[:, 0].max()),
                          "inner_iters": int(info[:, 1].max())}
@@ -104,12 +126,12 @@ def table6_sv_composition(scale: int):
     print("\n== Table VI: S-V channel composition ==")
     for ds in ("social", "social_dense"):
         pg = common.partitioned(ds, scale, "random",
-                                ("scatter_out", "prop_out", "raw_out"))
-        for name, variant in [("2-channel (basic)", "basic"),
-                              ("3-channel (reqresp)", "reqresp"),
-                              ("4-channel (scatter)", "scatter"),
-                              ("5-channel (both)", "both")]:
-            _, res = sv.run(pg, variant=variant)
+                                REGISTRY["sv:basic"].build)
+        for name, key in (("2-channel (basic)", "sv:basic"),
+                          ("3-channel (reqresp)", "sv:reqresp"),
+                          ("4-channel (scatter)", "sv:scatter"),
+                          ("5-channel (both)", "sv:both")):
+            res = _run(key, pg)
             common.emit("VI", f"S-V {name}", ds, res)
 
 
@@ -117,13 +139,11 @@ def table7_minlabel_scc(scale: int):
     """Table VII: Min-Label SCC with/without the propagation channel."""
     print("\n== Table VII: Min-Label SCC + propagation channel ==")
     for part, tag in [("random", "web"), ("bfs", "web (P)")]:
-        pg = common.partitioned(
-            "web", scale, part,
-            ("scatter_out", "scatter_in", "prop_out", "prop_in",
-             "raw_out", "raw_in"))
-        for name, variant in [("channel (basic)", "basic"),
-                              ("channel (prop)", "prop")]:
-            _, res = scc.run(pg, variant=variant)
+        pg = common.partitioned("web", scale, part,
+                                REGISTRY["scc:prop"].build)
+        for name, key in (("channel (basic)", "scc:basic"),
+                          ("channel (prop)", "scc:prop")):
+            res = _run(key, pg)
             common.emit("VII", f"SCC {name}", tag, res)
 
 
@@ -134,7 +154,7 @@ def bonus_sssp(scale: int):
     for part, tag in [("random", "weighted"), ("bfs", "weighted (P)")]:
         pg = pgraph.partition_graph(g, common.W, part,
                                     build=("prop_out", "raw_out"))
-        for name, variant in [("channel (basic)", "basic"),
-                              ("channel (prop)", "prop")]:
-            _, res = sssp.run(pg, 0, variant=variant)
+        for name, key in (("channel (basic)", "sssp:basic"),
+                          ("channel (prop)", "sssp:prop")):
+            res = _run(key, pg, source=0)
             common.emit("SSSP", f"SSSP {name}", tag, res)

@@ -4,6 +4,11 @@ combined-message + full-jumping channels, stacked via
 ``repro.core.compose`` — docs/composition.md), compared across channel
 compositions and verified against a host union-find oracle.
 
+All programs come from the registry (``repro.algorithms.REGISTRY``) and
+run through ONE compile-once ``Engine`` session (docs/programs.md) —
+the per-variant wall times below therefore pay trace+compile exactly
+once per program, the way a long-lived analytics service would.
+
     PYTHONPATH=src python examples/graph_analytics.py \
         [--scale 13] [--workers 8] [--mode fused]
 """
@@ -11,8 +16,9 @@ import argparse
 
 import numpy as np
 
-from repro.algorithms import sv, wcc
+from repro.algorithms import get_program
 from repro.graph import generators as gen, pgraph
+from repro.pregel.engine import Engine
 
 
 def canon(x):
@@ -41,23 +47,28 @@ def main():
     n_comp = len(set(truth.tolist()))
     print(f"  {n_comp} components (oracle)\n")
 
+    eng = Engine(mode=args.mode, chunk_size=args.chunk_size)
     print(f"{'program':26s} {'runtime':>9s} {'traffic':>12s} "
           f"{'supersteps':>10s}  correct")
     res_composed = None
     for variant in ("basic", "reqresp", "scatter", "both", "composed"):
-        lab, res = sv.run(pg, variant=variant, mode=args.mode,
-                          chunk_size=args.chunk_size)
+        res = eng.run(get_program(f"sv:{variant}"), pg)
         if variant == "composed":
             res_composed = res
-        ok = bool((canon(lab) == truth).all())
+        ok = bool((canon(res.output) == truth).all())
         print(f"S-V ({variant:9s})          {res.wall_time_s:8.2f}s "
               f"{res.total_bytes/1e6:10.3f} MB {res.steps:10d}  {ok}")
 
-    lab, res = wcc.run(pg, variant="prop", mode=args.mode,
-                       chunk_size=args.chunk_size)
-    ok = bool((canon(lab) == truth).all())
+    res = eng.run(get_program("wcc:prop"), pg)
+    ok = bool((canon(res.output) == truth).all())
     print(f"WCC (propagation)          {res.wall_time_s:8.2f}s "
           f"{res.total_bytes/1e6:10.3f} MB {res.steps:10d}  {ok}")
+
+    # a second composed run through the same session: zero compiles
+    warm = eng.run(get_program("sv:composed"), pg)
+    assert warm.cache_hit
+    print(f"\nwarm composed re-run       {warm.wall_time_s:8.2f}s "
+          f"(cache hit; session {eng.stats()})")
 
     print("\ncomposed S-V per-component bytes:")
     for key in ("pointer", "neighbor_min", "merge", "jump"):

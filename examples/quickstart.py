@@ -5,6 +5,9 @@ the optimized ScatterCombine channel — exactly the one-line optimization
 switch the paper demonstrates (§III-B), and prints the traffic
 difference. The superstep loop runs under the fused on-device runtime by
 default; pass --mode host|fused|chunked to compare (docs/runtime.md).
+This example drives the raw runtime to show the step contract; for the
+declarative VertexProgram / compile-once Engine / registry layer on top
+of it, see docs/programs.md and examples/graph_analytics.py.
 
     PYTHONPATH=src python examples/quickstart.py [--scale 12] [--mode fused]
 """

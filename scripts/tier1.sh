@@ -25,4 +25,8 @@ scripts/docs_check.sh
 echo "== examples (CI-sized) =="
 python examples/quickstart.py --scale 9
 python examples/graph_analytics.py --scale 9 --workers 4
+
+echo "== CLI (registry-driven) =="
+python -m repro list
+python -m repro run wcc --scale 9
 echo "tier1: all stages pass"

@@ -1,0 +1,181 @@
+"""``python -m repro`` — the registry-driven CLI.
+
+Subcommands:
+
+  list    every registered program (``algorithm:variant``), its declared
+          channels and the graph plans it needs.
+  run     run one program on a generated problem instance, verify it
+          against the host oracle, and print the RunResult summary.
+          ``--repeat N`` reuses the Engine session, so repeats report
+          compile-cache hits instead of paying the trace again.
+  bench   run a set of programs through one compile-once Engine per mode
+          and print paper-style rows (supersteps / messages / bytes /
+          wall time), optionally writing JSON.
+
+Examples:
+
+  python -m repro list
+  python -m repro run wcc --scale 9
+  python -m repro run sv:composed --scale 10 --mode fused --repeat 2
+  python -m repro bench --scale 10 --keys wcc:basic,wcc:switch --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.algorithms import ALGORITHMS, DEFAULT_VARIANT, REGISTRY, resolve
+from repro.graph import pgraph
+from repro.pregel.engine import Engine
+
+
+def _fmt_bytes(b: int) -> str:
+    return f"{b / 1e6:.3f} MB" if b >= 1e6 else f"{b} B"
+
+
+def _summary(res) -> str:
+    cache = "hit" if res.cache_hit else f"compile {res.compile_time_s:.2f}s"
+    return (f"steps {res.steps:5d}  msgs {res.total_msgs:10d}  "
+            f"traffic {_fmt_bytes(res.total_bytes):>12s}  "
+            f"wall {res.wall_time_s:7.3f}s  mode {res.mode}  "
+            f"dispatches {res.dispatches}  [{cache}]")
+
+
+def _prepare(spec, args):
+    graph = spec.make_graph(args.scale, args.seed)
+    pg = pgraph.partition_graph(graph, args.workers, args.partitioner,
+                                build=spec.build)
+    # --max-steps is a per-run Engine override (prop/pagerank factories
+    # manage their own budgets), not a factory knob
+    inputs = spec.inputs(graph, args.seed)
+    return graph, pg, inputs, spec.make(graph, args.seed)
+
+
+def cmd_list(args) -> int:
+    if args.json:
+        out = {
+            k: {
+                "algorithm": s.algorithm,
+                "variant": s.variant,
+                "default": DEFAULT_VARIANT[s.algorithm] == s.variant,
+                "build": list(s.build),
+                "channels": list(s.make(s.make_graph(6, 0)).channel_names()),
+            }
+            for k, s in sorted(REGISTRY.items())
+        }
+        print(json.dumps(out, indent=2))
+        return 0
+    print(f"{len(REGISTRY)} registered programs "
+          f"({len(ALGORITHMS)} algorithms):\n")
+    for algo in ALGORITHMS:
+        for key, spec in sorted(REGISTRY.items()):
+            if spec.algorithm != algo:
+                continue
+            star = "*" if DEFAULT_VARIANT[algo] == spec.variant else " "
+            plans = ",".join(spec.build) or "-"
+            print(f"  {star} {key:22s} plans: {plans}")
+    print("\n(* = default variant for `python -m repro run <algorithm>`)")
+    return 0
+
+
+def cmd_run(args) -> int:
+    spec = resolve(args.program)
+    print(f"== {spec.key} (scale {args.scale}, W={args.workers}, "
+          f"{args.partitioner} partition, mode {args.mode}) ==")
+    graph, pg, inputs, prog = _prepare(spec, args)
+    print(f"graph: n={graph.n} edges={graph.num_edges}  program: {prog}")
+    eng = Engine(mode=args.mode, chunk_size=args.chunk_size)
+    res = None
+    for i in range(max(1, args.repeat)):
+        res = eng.run(prog, pg, max_steps=args.max_steps)
+        print(f"run {i}: {_summary(res)}")
+    if args.repeat > 1:
+        print(f"engine session: {eng.stats()}")
+    for name in sorted(res.bytes_by_channel):
+        print(f"  {name:32s} {res.bytes_by_channel[name]:12d} B "
+              f"{res.msgs_by_channel[name]:10d} msgs")
+    if args.check and spec.check is not None:
+        spec.check(graph, pg, res, inputs)
+        print("oracle: ok")
+    return 0
+
+
+def cmd_bench(args) -> int:
+    keys = (args.keys.split(",") if args.keys
+            else [f"{a}:{DEFAULT_VARIANT[a]}" for a in ALGORITHMS])
+    modes = args.modes.split(",")
+    engines = {m: Engine(mode=m, chunk_size=args.chunk_size) for m in modes}
+    rows = []
+    print(f"== bench (scale {args.scale}, W={args.workers}) ==")
+    for name in keys:
+        spec = resolve(name)
+        graph, pg, inputs, prog = _prepare(spec, args)
+        for mode in modes:
+            res = engines[mode].run(prog, pg, max_steps=args.max_steps)
+            rows.append({
+                "program": spec.key, "mode": mode, "supersteps": res.steps,
+                "messages": res.total_msgs, "bytes": res.total_bytes,
+                "wall_time_s": round(res.wall_time_s, 4),
+                "compile_time_s": round(res.compile_time_s, 4),
+                "cache_hit": res.cache_hit,
+            })
+            print(f"  {spec.key:22s} [{mode:7s}] {_summary(res)}")
+    stats = {m: engines[m].stats() for m in modes}
+    print(f"engine sessions: {stats}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"scale": args.scale, "workers": args.workers,
+                       "rows": rows, "engines": stats}, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro", description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p_list = sub.add_parser("list", help="list registered programs")
+    p_list.add_argument("--json", action="store_true")
+    p_list.set_defaults(fn=cmd_list)
+
+    def common(p):
+        p.add_argument("--scale", type=int, default=10,
+                       help="graph scale (n = 2^scale)")
+        p.add_argument("--workers", type=int, default=8)
+        p.add_argument("--partitioner", default="random",
+                       choices=("block", "random", "bfs"))
+        p.add_argument("--chunk-size", type=int, default=64)
+        p.add_argument("--max-steps", type=int, default=None)
+        p.add_argument("--seed", type=int, default=0)
+
+    p_run = sub.add_parser("run", help="run one program, verify the oracle")
+    p_run.add_argument("program",
+                       help="algorithm (default variant) or algorithm:variant")
+    common(p_run)
+    p_run.add_argument("--mode", default="fused",
+                       choices=("host", "fused", "chunked"))
+    p_run.add_argument("--repeat", type=int, default=1,
+                       help="re-run through the same Engine session")
+    p_run.add_argument("--no-check", dest="check", action="store_false",
+                       help="skip the host-oracle verification")
+    p_run.set_defaults(fn=cmd_run)
+
+    p_bench = sub.add_parser("bench", help="bench programs via one Engine")
+    p_bench.add_argument("--keys", default=None,
+                         help="comma list of programs (default: one per "
+                              "algorithm)")
+    common(p_bench)
+    p_bench.add_argument("--modes", default="fused",
+                         help="comma list of execution modes")
+    p_bench.add_argument("--json", default=None, help="write rows to JSON")
+    p_bench.set_defaults(fn=cmd_bench)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,283 @@
+"""The algorithm registry: every paper program as data.
+
+Each algorithm module exports ``program(variant=..., **knobs) ->
+VertexProgram``; this package assembles them into ``REGISTRY`` — a flat
+``"algorithm:variant"`` table of :class:`ProgramSpec` entries that also
+carry the *problem recipe*: which graph plans the program needs
+(``build``), how to generate a benchmark/test instance of its problem
+(``make_graph``/``make_inputs``), and how to verify an answer against
+the host oracles (``check``). The ``python -m repro`` CLI, the
+registry-parametrized test sweep and the benchmark tables are all driven
+from here, so adding a variant to an algorithm module plus one REGISTRY
+line makes it appear everywhere.
+
+    from repro.algorithms import REGISTRY, get_program
+    spec = REGISTRY["wcc:switch"]
+    prog = get_program("wcc:switch")          # memoized — share an
+                                              # instance to share compiles
+
+``get_program`` returns the same VertexProgram instance for the same
+(key, knobs), which is what makes Engine compile caches hit across call
+sites (programs hash by identity).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.algorithms import msf, pagerank, pointer_jumping, scc, sssp, sv, wcc
+from repro.graph import generators as gen, oracles
+from repro.pregel.program import VertexProgram
+
+ALL_PLANS = ("scatter_out", "scatter_in", "prop_out", "prop_in",
+             "raw_out", "raw_in")
+
+
+def _canon(x):
+    first: Dict[Any, int] = {}
+    return np.array([first.setdefault(v, i) for i, v in enumerate(x)])
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSpec:
+    """One registry entry: a program factory plus its problem recipe.
+
+    factory: ``factory(**knobs) -> VertexProgram`` (variant pre-bound).
+    build: the ``partition_graph(build=...)`` plans the program needs.
+    make_graph: ``(scale, seed) -> EdgeList`` default problem graph.
+    make_inputs: optional ``(graph, seed) -> knobs`` problem inputs that
+      must reach the factory (a SSSP source, a pointer-jumping forest).
+    check: optional ``(graph, pg, res, inputs) -> None`` — asserts a
+      default-knob run's ``res.output`` against the host oracle.
+    legacy: ``(pg, inputs, mode, chunk_size) -> (output, RunResult)`` via
+      the backward-compatible module ``run()`` wrapper — the bit-parity
+      reference for registry-driven runs.
+    test_scale: graph scale the test sweep / CLI default to.
+    """
+
+    key: str
+    algorithm: str
+    variant: str
+    factory: Callable[..., VertexProgram]
+    build: Tuple[str, ...]
+    make_graph: Callable[[int, int], gen.EdgeList]
+    make_inputs: Optional[Callable] = None
+    check: Optional[Callable] = None
+    legacy: Optional[Callable] = None
+    test_scale: int = 8
+
+    def inputs(self, graph: gen.EdgeList, seed: int = 0) -> Dict[str, Any]:
+        return dict(self.make_inputs(graph, seed)) if self.make_inputs else {}
+
+    def make(self, graph: Optional[gen.EdgeList] = None, seed: int = 0,
+             **knobs) -> VertexProgram:
+        """Build the program, threading generated problem inputs through
+        (explicit ``knobs`` win)."""
+        kw = self.inputs(graph, seed) if graph is not None else {}
+        kw.update(knobs)
+        return self.factory(**kw)
+
+
+# --- default problem instances (deterministic in (scale, seed)) ------------
+
+
+def _sym_rmat(scale, seed):
+    return gen.rmat(scale, edge_factor=4, seed=2 + seed).symmetrized()
+
+
+def _directed_rmat(scale, seed):
+    return gen.rmat(scale, edge_factor=4, seed=2 + seed)
+
+
+def _weighted_rmat(scale, seed):
+    return gen.rmat(scale, edge_factor=4, seed=5 + seed, weighted=True)
+
+
+def _weighted_sym_rmat(scale, seed):
+    return gen.rmat(scale, edge_factor=4, seed=9 + seed,
+                    weighted=True).symmetrized()
+
+
+def _scc_rmat(scale, seed):
+    return gen.rmat(scale, edge_factor=3, seed=7 + seed)
+
+
+def _forest_graph(scale, seed):
+    n = 1 << scale
+    return gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
+
+
+def _forest_inputs(graph, seed):
+    return {"parents": gen.random_tree_parents(graph.n, seed=1 + seed)}
+
+
+# --- oracle checks ----------------------------------------------------------
+
+
+def _check_components(graph, pg, res, inputs):
+    truth = gen.components_ground_truth(graph)
+    np.testing.assert_array_equal(_canon(res.output), _canon(truth))
+
+
+def _check_pagerank(graph, pg, res, inputs):
+    want = oracles.pagerank_oracle(graph, iters=res.steps)
+    np.testing.assert_allclose(res.output, want, rtol=1e-4, atol=1e-7)
+
+
+def _check_sssp(graph, pg, res, inputs):
+    want = oracles.sssp_oracle(graph, source=inputs.get("source", 0))
+    finite = ~np.isinf(want)
+    np.testing.assert_allclose(res.output[finite], want[finite], rtol=1e-5)
+    assert np.isinf(res.output[~finite]).all()
+
+
+def _check_scc(graph, pg, res, inputs):
+    want = oracles.scc_oracle(graph)
+    np.testing.assert_array_equal(_canon(res.output), _canon(want))
+
+
+def _check_msf(graph, pg, res, inputs):
+    want_w = oracles.msf_weight_oracle(graph)
+    assert abs(res.output["weight"] - want_w) < 1e-2
+    truth = gen.components_ground_truth(graph)
+    assert res.output["edges"] == graph.n - len(set(truth.tolist()))
+
+
+def _check_pj(graph, pg, res, inputs):
+    p = inputs["parents"].copy()
+    for _ in range(graph.n):
+        nxt = p[p]
+        if (nxt == p).all():
+            break
+        p = nxt
+    np.testing.assert_array_equal(res.output, pg.new_of_old.arr[p])
+    assert res.halted
+
+
+# --- the registry -----------------------------------------------------------
+
+
+def _bind(program_fn, variant):
+    return lambda **kw: program_fn(variant=variant, **kw)
+
+
+def _specs():
+    def add(out, algorithm, variant, program_fn, legacy, **kw):
+        key = f"{algorithm}:{variant}"
+        out[key] = ProgramSpec(
+            key=key, algorithm=algorithm, variant=variant,
+            factory=_bind(program_fn, variant),
+            legacy=legacy, **kw,
+        )
+
+    out: Dict[str, ProgramSpec] = {}
+
+    for v in wcc.VARIANTS:
+        add(out, "wcc", v, wcc.program,
+            lambda pg, inputs, mode, cs, _v=v: wcc.run(
+                pg, variant=_v, mode=mode, chunk_size=cs),
+            build=("scatter_out", "prop_out", "raw_out"),
+            make_graph=_sym_rmat, check=_check_components)
+
+    for v in sv.VARIANTS:
+        add(out, "sv", v, sv.program,
+            lambda pg, inputs, mode, cs, _v=v: sv.run(
+                pg, variant=_v, mode=mode, chunk_size=cs),
+            build=("scatter_out", "prop_out", "raw_out"),
+            make_graph=_sym_rmat, check=_check_components)
+
+    for v in pagerank.VARIANTS:
+        add(out, "pagerank", v, pagerank.program,
+            lambda pg, inputs, mode, cs, _v=v: pagerank.run(
+                pg, variant=_v, mode=mode, chunk_size=cs),
+            build=("scatter_out", "raw_out"),
+            make_graph=_directed_rmat, check=_check_pagerank)
+
+    for v in sssp.VARIANTS:
+        add(out, "sssp", v, sssp.program,
+            lambda pg, inputs, mode, cs, _v=v: sssp.run(
+                pg, inputs.get("source", 0), variant=_v, mode=mode,
+                chunk_size=cs),
+            build=("prop_out", "raw_out"),
+            make_graph=_weighted_rmat,
+            make_inputs=lambda graph, seed: {"source": 0},
+            check=_check_sssp)
+
+    for v in msf.VARIANTS:
+        add(out, "msf", v, msf.program,
+            lambda pg, inputs, mode, cs, _v=v: msf.run(
+                pg, variant=_v, mode=mode, chunk_size=cs),
+            build=("raw_out",),
+            make_graph=_weighted_sym_rmat, check=_check_msf, test_scale=7)
+
+    for v in scc.VARIANTS:
+        add(out, "scc", v, scc.program,
+            lambda pg, inputs, mode, cs, _v=v: scc.run(
+                pg, variant=_v, mode=mode, chunk_size=cs),
+            build=ALL_PLANS,
+            make_graph=_scc_rmat, check=_check_scc, test_scale=7)
+
+    for v in pointer_jumping.VARIANTS:
+        add(out, "pj", v, pointer_jumping.program,
+            lambda pg, inputs, mode, cs, _v=v: pointer_jumping.run(
+                pg, inputs["parents"], variant=_v, mode=mode, chunk_size=cs),
+            build=(),
+            make_graph=_forest_graph, make_inputs=_forest_inputs,
+            check=_check_pj, test_scale=9)
+
+    return out
+
+
+REGISTRY: Dict[str, ProgramSpec] = _specs()
+
+#: the variant ``python -m repro run <algorithm>`` picks when no variant
+#: is given — each algorithm's optimized-channel showcase
+DEFAULT_VARIANT: Dict[str, str] = {
+    "wcc": "prop",
+    "sv": "both",
+    "msf": "channels",
+    "scc": "prop",
+    "sssp": "basic",
+    "pagerank": "scatter",
+    "pj": "reqresp",
+}
+
+ALGORITHMS: Tuple[str, ...] = tuple(sorted(DEFAULT_VARIANT))
+
+
+def resolve(name: str) -> ProgramSpec:
+    """``"wcc"`` (default variant) or ``"wcc:switch"`` -> ProgramSpec."""
+    key = name if ":" in name else f"{name}:{DEFAULT_VARIANT.get(name, '')}"
+    try:
+        return REGISTRY[key]
+    except KeyError:
+        raise KeyError(
+            f"unknown program {name!r}; registered: {', '.join(sorted(REGISTRY))}"
+        ) from None
+
+
+# memo value keeps the knobs alive alongside the program, so id()-keyed
+# array knobs can never be recycled onto a different array
+_PROGRAMS: Dict[Tuple, Tuple[VertexProgram, Dict[str, Any]]] = {}
+
+
+def get_program(key: str, **knobs) -> VertexProgram:
+    """Memoized program lookup: the same (key, knobs) returns the *same*
+    VertexProgram instance, so Engine compile caches hit across call
+    sites. Array knobs (e.g. a pointer-jumping parents forest) memoize
+    by object identity; other unhashable knobs skip the memo."""
+    spec = resolve(key)
+    items = tuple(sorted(
+        (k, id(v) if isinstance(v, np.ndarray) else v)
+        for k, v in knobs.items()))
+    try:
+        memo_key = (spec.key, items)
+        hash(memo_key)
+    except TypeError:
+        return spec.factory(**knobs)
+    entry = _PROGRAMS.get(memo_key)
+    if entry is None:
+        entry = _PROGRAMS[memo_key] = (spec.factory(**knobs), dict(knobs))
+    return entry[0]

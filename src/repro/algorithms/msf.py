@@ -12,13 +12,17 @@ Variants:
                   Built as a :class:`repro.core.compose.Stacked`
                   composition (paper §V): the five constituent channels
                   are namespaced under ``msf/`` with per-component traffic
-                  attribution, and the stack declares its registry entry
-                  set to the runtime.
+                  attribution, and the composed VertexProgram declares the
+                  stack's registry entry set (no dry trace).
   - "monolithic": Pregel-style single message type — every message padded
                   to the largest (the 16-byte 4-tuple), no request dedup.
 
 Weights must be unique (the generators use iid uniforms) — standard
 Boruvka assumption; ids must fit float32 exactly (n < 2**24).
+
+``program(variant=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram`; ``run`` is the thin
+one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -29,9 +33,12 @@ from repro.algorithms import common
 from repro.core import compose
 from repro.core import message as msg
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
 
 TUPLE_W = 16  # bytes of the largest message (w, comp, src, dst)
+
+VARIANTS = ("channels", "monolithic")
 
 
 def typed_channels() -> compose.Stacked:
@@ -48,12 +55,12 @@ def typed_channels() -> compose.Stacked:
     )
 
 
-def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
-        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
-    assert pg.n < (1 << 24), "ids must be exact in float32"
-    typed = variant == "channels"
-    if variant not in ("channels", "monolithic"):
+def program(variant: str = "channels", *, max_steps: int = 64) -> VertexProgram:
+    """Boruvka MSF as a VertexProgram. Output: dict with the total forest
+    ``weight``, its ``edges`` count, and per-vertex component ``labels``."""
+    if variant not in VARIANTS:
         raise ValueError(variant)
+    typed = variant == "channels"
     pad = None if typed else TUPLE_W
     chan = typed_channels() if typed else None
 
@@ -140,16 +147,30 @@ def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
             "msf_cnt": state["msf_cnt"] + add_c,
         }, halt, overflow
 
-    ids = pg.global_ids().astype(jnp.int32)
-    state0 = {
-        "L": ids,
-        "msf_w": jnp.zeros((pg.num_workers,), jnp.float32),
-        "msf_cnt": jnp.zeros((pg.num_workers,), jnp.int32),
-    }
-    res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size, channels=chan)
-    total_w = float(np.asarray(res.state["msf_w"]).sum())
-    total_c = int(np.asarray(res.state["msf_cnt"]).sum())
-    return {"weight": total_w, "edges": total_c,
-            "labels": pg.to_global(res.state["L"])}, res
+    def init(pg):
+        assert pg.n < (1 << 24), "ids must be exact in float32"
+        return {
+            "L": pg.global_ids().astype(jnp.int32),
+            "msf_w": jnp.zeros((pg.num_workers,), jnp.float32),
+            "msf_cnt": jnp.zeros((pg.num_workers,), jnp.int32),
+        }
+
+    def extract(pg, state):
+        total_w = float(np.asarray(state["msf_w"]).sum())
+        total_c = int(np.asarray(state["msf_cnt"]).sum())
+        return {"weight": total_w, "edges": total_c,
+                "labels": pg.to_global(state["L"])}
+
+    return VertexProgram(
+        name=f"msf:{variant}", init=init, step=step, extract=extract,
+        channels=chan, max_steps=max_steps,
+        meta={"algorithm": "msf", "variant": variant},
+    )
+
+
+def run(pg: PartitionedGraph, variant: str = "channels", max_steps: int = 64,
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
+    prog = program(variant=variant, max_steps=max_steps)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -5,6 +5,10 @@ Variants:
                ids on the wire) — the standard-channel Fig. 1 program.
   - "scatter": ScatterCombine channel (static plan, no ids) — the paper's
                one-line optimization switch.
+
+``program(variant=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram`; ``run`` is the thin
+one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -14,15 +18,25 @@ from repro.core import aggregator as agg
 from repro.core import message as msg
 from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
+
+VARIANTS = ("basic", "scatter")
 
 
-def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
-        damping: float = 0.85, backend: str = "vmap", mesh=None,
-        use_kernel: bool = False, mode=None, chunk_size: int = 64):
-    n = jnp.float32(pg.n)
+def program(variant: str = "scatter", *, iters: int = 30,
+            damping: float = 0.85, use_kernel: bool = False) -> VertexProgram:
+    """PageRank as a VertexProgram. Output: (n,) ranks in old-id space."""
+    if variant not in VARIANTS:
+        raise ValueError(variant)
+
+    def init(pg):
+        return {"pr": jnp.where(pg.v_mask, 1.0 / jnp.float32(pg.n), 0.0)}
 
     def step(ctx, gs, state, step_idx):
+        # gs.n is a static field of the graph shard — the program stays
+        # graph-agnostic (n is baked per compiled shape, not per program)
+        n = jnp.float32(gs.n)
         pr = state["pr"]
         deg = jnp.maximum(gs.deg_out, 1).astype(jnp.float32)
         contrib = jnp.where(gs.deg_out > 0, pr / deg, 0.0)
@@ -31,7 +45,7 @@ def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
             incoming = sc.broadcast_combine(
                 ctx, gs.scatter_out, contrib, "sum", use_kernel=use_kernel
             )
-        elif variant == "basic":
+        else:
             raw = gs.raw_out
             incoming, _, overflow = msg.combined_send(
                 ctx,
@@ -41,8 +55,6 @@ def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
                 "sum",
                 capacity=ctx.n_loc,
             )
-        else:
-            raise ValueError(variant)
         sink = agg.aggregate(
             ctx, jnp.where((gs.deg_out == 0) & gs.v_mask, pr, 0.0), "sum"
         )
@@ -51,8 +63,22 @@ def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
         )
         return {"pr": new_pr}, step_idx >= iters - 1, overflow
 
-    state0 = {"pr": jnp.where(pg.v_mask, 1.0 / n, 0.0)}
-    res = runtime.run_supersteps(pg, step, state0, max_steps=iters,
-                                 backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size)
-    return pg.to_global(res.state["pr"]), res
+    def extract(pg, state):
+        return pg.to_global(state["pr"])
+
+    return VertexProgram(
+        name=f"pagerank:{variant}", init=init, step=step, extract=extract,
+        max_steps=iters,
+        meta={"algorithm": "pagerank", "variant": variant, "iters": iters,
+              "damping": damping},
+    )
+
+
+def run(pg: PartitionedGraph, iters: int = 30, variant: str = "scatter",
+        damping: float = 0.85, backend: str = "vmap", mesh=None,
+        use_kernel: bool = False, mode=None, chunk_size: int = 64):
+    prog = program(variant=variant, iters=iters, damping=damping,
+                   use_kernel=use_kernel)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -5,6 +5,11 @@ Variants:
   - "basic":   two DirectMessage rounds per superstep (ids both ways,
                no dedup) — Pregel's way.
   - "reqresp": the RequestRespond channel (dedup + positional replies).
+
+``program(variant=..., parents=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram` — the forest (old-id parent
+array) is the problem input and is closed over by ``init``; ``run`` is
+the thin one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -14,7 +19,10 @@ import numpy as np
 from repro.algorithms import common
 from repro.core import request_respond as rr
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
+
+VARIANTS = ("basic", "reqresp")
 
 
 def parents_to_local(pg: PartitionedGraph, parents_old: np.ndarray):
@@ -25,10 +33,15 @@ def parents_to_local(pg: PartitionedGraph, parents_old: np.ndarray):
     return jnp.asarray(flat.reshape(pg.num_workers, pg.n_loc).astype(np.int32))
 
 
-def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
-        max_steps: int = 64, backend: str = "vmap", mesh=None, mode=None,
-        chunk_size: int = 64):
-    p0 = parents_to_local(pg, parents_old)
+def program(variant: str = "reqresp", *, parents: np.ndarray,
+            max_steps: int = 64) -> VertexProgram:
+    """Pointer jumping as a VertexProgram. Output: (n,) root ids in
+    *new*-id space (as the legacy ``run`` returned)."""
+    if variant not in VARIANTS:
+        raise ValueError(variant)
+
+    def init(pg):
+        return {"P": parents_to_local(pg, parents)}
 
     def step(ctx, gs, state, step_idx):
         p = state["P"]
@@ -36,17 +49,26 @@ def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
             grand, overflow = rr.request(
                 ctx, p.reshape(-1), gs.v_mask.reshape(-1), p, capacity=ctx.n_loc
             )
-        elif variant == "basic":
+        else:
             grand, overflow = common.direct_request_respond(
                 ctx, p.reshape(-1), gs.v_mask.reshape(-1), p
             )
-        else:
-            raise ValueError(variant)
         newp = jnp.where(gs.v_mask, grand.reshape(p.shape), p)
         return {"P": newp}, jnp.all(newp == p), overflow
 
-    res = runtime.run_supersteps(pg, step, {"P": p0}, max_steps=max_steps,
-                                 backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size)
-    roots_new = pg.to_global(res.state["P"])
-    return roots_new, res
+    def extract(pg, state):
+        return pg.to_global(state["P"])
+
+    return VertexProgram(
+        name=f"pj:{variant}", init=init, step=step, extract=extract,
+        max_steps=max_steps, meta={"algorithm": "pj", "variant": variant},
+    )
+
+
+def run(pg: PartitionedGraph, parents_old: np.ndarray, variant: str = "reqresp",
+        max_steps: int = 64, backend: str = "vmap", mesh=None, mode=None,
+        chunk_size: int = 64):
+    prog = program(variant=variant, parents=parents_old, max_steps=max_steps)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -8,6 +8,10 @@ Variants:
   - "basic": forward/backward phases via per-superstep CombinedMessage.
   - "prop":  forward/backward phases via the Propagation channel — the
              paper's 'quick fix not possible in any existing system'.
+
+``program(variant=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram`; ``run`` is the thin
+one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -18,15 +22,21 @@ from repro.core import compose
 from repro.core import propagation as prop
 from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
 
 INF32 = jnp.iinfo(jnp.int32).max
 
+VARIANTS = ("basic", "prop")
 
-def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
-        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
-    """pg must be built with scatter_out+scatter_in and (prop_out+prop_in
-    for "prop") or (raw_out+raw_in for "basic") on the DIRECTED graph."""
+
+def program(variant: str = "prop", *, max_steps: int = 500) -> VertexProgram:
+    """Min-label SCC as a VertexProgram. Output: (n,) SCC labels (min
+    member id) in old-id space. The graph must be built with
+    scatter_out+scatter_in and (prop_out+prop_in for "prop") or
+    (raw_out+raw_in for "basic") on the DIRECTED graph."""
+    if variant not in VARIANTS:
+        raise ValueError(variant)
 
     def min_label(ctx, gs, alive, direction):
         ids = ctx.me() * ctx.n_loc + jnp.arange(ctx.n_loc, dtype=jnp.int32)
@@ -51,7 +61,7 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
         return lab, iters
 
     def step(ctx, gs, state, step_idx):
-        alive, scc = state["alive"], state["scc"]
+        alive, scc_lab = state["alive"], state["scc"]
         gid = ctx.me() * ctx.n_loc + jnp.arange(ctx.n_loc, dtype=jnp.int32)
 
         # trivial removal: alive in/out degree == 0 => own SCC. The two
@@ -65,29 +75,42 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
                                       name="degree/in"),
         ])
         trivial = alive & ((in_alive == 0) | (out_alive == 0))
-        scc = jnp.where(trivial, gid, scc)
+        scc_lab = jnp.where(trivial, gid, scc_lab)
         alive = alive & ~trivial
 
         # forward/backward min-label among alive
         f_lab, it_f = min_label(ctx, gs, alive, "fwd")
         b_lab, it_b = min_label(ctx, gs, alive, "bwd")
         found = alive & (f_lab == b_lab) & (f_lab != INF32)
-        scc = jnp.where(found, f_lab, scc)
+        scc_lab = jnp.where(found, f_lab, scc_lab)
         alive = alive & ~found
 
         halt = ~jnp.any(alive)
         return {
             "alive": alive,
-            "scc": scc,
+            "scc": scc_lab,
             "iters": state["iters"] + it_f + it_b,
         }, halt
 
-    state0 = {
-        "alive": pg.v_mask,
-        "scc": jnp.full((pg.num_workers, pg.n_loc), -1, jnp.int32),
-        "iters": jnp.zeros((pg.num_workers,), jnp.int32),
-    }
-    res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size)
-    return pg.to_global(res.state["scc"]), res
+    def init(pg):
+        return {
+            "alive": pg.v_mask,
+            "scc": jnp.full((pg.num_workers, pg.n_loc), -1, jnp.int32),
+            "iters": jnp.zeros((pg.num_workers,), jnp.int32),
+        }
+
+    def extract(pg, state):
+        return pg.to_global(state["scc"])
+
+    return VertexProgram(
+        name=f"scc:{variant}", init=init, step=step, extract=extract,
+        max_steps=max_steps, meta={"algorithm": "scc", "variant": variant},
+    )
+
+
+def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 500,
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64):
+    prog = program(variant=variant, max_steps=max_steps)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -6,6 +6,11 @@ Variants:
   - "basic": per-superstep CombinedMessage from active (improved) vertices.
   - "prop":  Propagation channel with edge_transform = dist + w — the
              channel generalizes beyond min-label propagation.
+
+``program(variant=..., source=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram` — the source vertex (old-id)
+is the problem input, resolved per graph inside ``init``; ``run`` is the
+thin one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -15,21 +20,36 @@ import numpy as np
 from repro.core import message as msg
 from repro.core import propagation as prop
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
 
 INF = jnp.float32(np.inf)
 
+VARIANTS = ("basic", "prop")
 
-def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
-        max_steps: int = 10_000, backend: str = "vmap", mesh=None,
-        mode=None, chunk_size: int = 64):
-    src_new = int(pg.new_of_old.arr[source_old])
-    ids = pg.global_ids()
-    dist0 = jnp.where(ids == src_new, 0.0, INF).astype(jnp.float32)
 
-    add_w = lambda v, w: v + (w[:, None] if v.ndim == 2 else w)
+def program(variant: str = "basic", *, source: int = 0,
+            max_steps: int = 10_000) -> VertexProgram:
+    """SSSP as a VertexProgram. Output: (n,) float32 distances in old-id
+    space (inf = unreachable)."""
+    if variant not in VARIANTS:
+        raise ValueError(variant)
+
+    def dist0_of(pg):
+        src_new = int(pg.new_of_old.arr[source])
+        ids = pg.global_ids()
+        return jnp.where(ids == src_new, 0.0, INF).astype(jnp.float32), src_new
+
+    def extract(pg, state):
+        return pg.to_global(state["dist"])
 
     if variant == "prop":
+        add_w = lambda v, w: v + (w[:, None] if v.ndim == 2 else w)
+
+        def init(pg):
+            dist0, _ = dist0_of(pg)
+            return {"dist": dist0,
+                    "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
 
         def step(ctx, gs, state, step_idx):
             dist, rounds, iters = prop.propagate(
@@ -38,32 +58,43 @@ def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
             info = jnp.stack([rounds, iters]).astype(jnp.int32)
             return {"dist": dist, "info": info}, True
 
-        state0 = {"dist": dist0, "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
-        res = runtime.run_supersteps(pg, step, state0, max_steps=1,
-                                     backend=backend, mesh=mesh, mode=mode,
-                                     chunk_size=chunk_size)
-    elif variant == "basic":
+        return VertexProgram(
+            name="sssp:prop", init=init, step=step, extract=extract,
+            max_steps=1,
+            meta={"algorithm": "sssp", "variant": variant, "source": source},
+        )
 
-        def step(ctx, gs, state, step_idx):
-            dist, active = state["dist"], state["active"]
-            raw = gs.raw_out
-            send_val = dist[raw.src_local] + raw.w
-            valid = raw.mask & active[raw.src_local]
-            inc, got, overflow = msg.combined_send(
-                ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
-            )
-            new = jnp.where(gs.v_mask, jnp.minimum(dist, inc), dist)
-            new_active = new < dist
-            return (
-                {"dist": new, "active": new_active},
-                ~jnp.any(new_active),
-                overflow,
-            )
+    def init(pg):
+        dist0, src_new = dist0_of(pg)
+        return {"dist": dist0, "active": pg.global_ids() == src_new}
 
-        state0 = {"dist": dist0, "active": ids == src_new}
-        res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                     backend=backend, mesh=mesh, mode=mode,
-                                     chunk_size=chunk_size)
-    else:
-        raise ValueError(variant)
-    return pg.to_global(res.state["dist"]), res
+    def step(ctx, gs, state, step_idx):
+        dist, active = state["dist"], state["active"]
+        raw = gs.raw_out
+        send_val = dist[raw.src_local] + raw.w
+        valid = raw.mask & active[raw.src_local]
+        inc, got, overflow = msg.combined_send(
+            ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
+        )
+        new = jnp.where(gs.v_mask, jnp.minimum(dist, inc), dist)
+        new_active = new < dist
+        return (
+            {"dist": new, "active": new_active},
+            ~jnp.any(new_active),
+            overflow,
+        )
+
+    return VertexProgram(
+        name="sssp:basic", init=init, step=step, extract=extract,
+        max_steps=max_steps,
+        meta={"algorithm": "sssp", "variant": variant, "source": source},
+    )
+
+
+def run(pg: PartitionedGraph, source_old: int, variant: str = "basic",
+        max_steps: int = 10_000, backend: str = "vmap", mesh=None,
+        mode=None, chunk_size: int = 64):
+    prog = program(variant=variant, source=source_old, max_steps=max_steps)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -25,12 +25,17 @@ needs fewer global rounds AND less traffic than any single-channel
 variant, the paper's headline 2.20x composition result. Traffic is
 attributed per component under namespaced keys (``sv/pointer/request``,
 ``sv/neighbor_min``, ``sv/merge``, ``sv/jump``, ...), and the stack
-declares its full registry entry set to the runtime
-(``channels=<stack>``).
+declares its full registry entry set to the runtime (the composed
+VertexProgram carries ``channels=<stack>``, so the runtime skips the
+eval_shape dry trace entirely).
 
 All variants converge to D[u] = min vertex id of u's component, so their
 final states are bit-identical (tests/test_compose.py relies on this).
 The graph must be symmetrized.
+
+``program(variant=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram`; ``run`` is the thin
+one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -42,7 +47,8 @@ from repro.core import message as msg
 from repro.core import request_respond as rr
 from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
 
 INF32 = jnp.iinfo(jnp.int32).max
 
@@ -102,26 +108,32 @@ def _composed_step(chan: compose.Stacked):
     return step
 
 
-def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
-        backend: str = "vmap", mesh=None, use_kernel: bool = False,
-        mode=None, chunk_size: int = 64):
+def _init(pg):
+    return {"D": pg.global_ids().astype(jnp.int32)}  # D[u] = u (pads too)
+
+
+def _extract(pg, state):
+    return pg.to_global(state["D"])
+
+
+def program(variant: str = "both", *, max_steps: int = 200,
+            use_kernel: bool = False) -> VertexProgram:
+    """S-V as a VertexProgram. Output: (n,) component labels (min member
+    id) in old-id space."""
     if variant not in VARIANTS:
         raise ValueError(variant)
-    use_rr = variant in ("reqresp", "both")
-    use_sc = variant in ("scatter", "both")
-    monolithic = variant == "monolithic"
-
-    ids = pg.global_ids().astype(jnp.int32)
-    state0 = {"D": ids}  # D[u] = u (pads too)
+    meta = {"algorithm": "sv", "variant": variant}
 
     if variant == "composed":
         chan = composed_channels(use_kernel=use_kernel)
-        res = runtime.run_supersteps(
-            pg, _composed_step(chan), state0, max_steps=max_steps,
-            backend=backend, mesh=mesh, mode=mode, chunk_size=chunk_size,
-            channels=chan,
+        return VertexProgram(
+            name="sv:composed", init=_init, step=_composed_step(chan),
+            extract=_extract, channels=chan, max_steps=max_steps, meta=meta,
         )
-        return pg.to_global(res.state["D"]), res
+
+    use_rr = variant in ("reqresp", "both")
+    use_sc = variant in ("scatter", "both")
+    monolithic = variant == "monolithic"
 
     def ask(ctx, gs, dst_per_vertex, vals):
         """D[dst] for every local vertex, via the selected channel."""
@@ -163,7 +175,6 @@ def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
 
     def step(ctx, gs, state, step_idx):
         d = state["D"]
-        gid = ctx.me() * ctx.n_loc + jnp.arange(ctx.n_loc, dtype=jnp.int32)
 
         # 1. is my parent a root?  (grand == D[u])
         grand, ovf1 = ask(ctx, gs, d, d)
@@ -198,7 +209,17 @@ def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
         overflow = ovf1 | ovf2 | ovf3 | ovf4
         return {"D": d2}, halt, overflow
 
-    res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                 backend=backend, mesh=mesh, mode=mode,
-                                 chunk_size=chunk_size)
-    return pg.to_global(res.state["D"]), res
+    return VertexProgram(
+        name=f"sv:{variant}", init=_init, step=step, extract=_extract,
+        max_steps=max_steps, meta=meta,
+    )
+
+
+def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
+        backend: str = "vmap", mesh=None, use_kernel: bool = False,
+        mode=None, chunk_size: int = 64):
+    prog = program(variant=variant, max_steps=max_steps,
+                   use_kernel=use_kernel)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

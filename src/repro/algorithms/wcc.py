@@ -17,6 +17,10 @@ Variants:
 
 The graph must be symmetrized (undirected view). "switch" needs both the
 ``scatter_out`` and ``raw_out`` plans.
+
+``program(variant=...)`` builds the declarative
+:class:`~repro.pregel.program.VertexProgram`; ``run`` is the thin
+one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
@@ -27,17 +31,32 @@ from repro.core import message as msg
 from repro.core import propagation as prop
 from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
-from repro.pregel import runtime
+from repro.pregel import engine
+from repro.pregel.program import VertexProgram
 
 INF32 = jnp.iinfo(jnp.int32).max
 
+VARIANTS = ("basic", "prop", "switch")
 
-def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
-        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64,
-        dense_threshold: float = 0.1):
-    ids = pg.global_ids().astype(jnp.int32)
+
+def program(variant: str = "prop", *, max_steps: int = 10_000,
+            dense_threshold: float = 0.1) -> VertexProgram:
+    """Min-label WCC as a VertexProgram. Output: (n,) component labels in
+    old-id space (min member id per component, canonicalized by tests)."""
+    if variant not in VARIANTS:
+        raise ValueError(variant)
+
+    def extract(pg, state):
+        return pg.to_global(state["lab"])
 
     if variant == "prop":
+
+        def init(pg):
+            ids = pg.global_ids().astype(jnp.int32)
+            return {
+                "lab": jnp.where(pg.v_mask, ids, INF32),
+                "info": jnp.zeros((pg.num_workers, 2), jnp.int32),
+            }
 
         def step(ctx, gs, state, step_idx):
             lab0 = state["lab"]
@@ -46,61 +65,69 @@ def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
             info = jnp.stack([rounds, iters]).astype(jnp.int32)
             return {"lab": lab, "info": info}, True
 
-        state0 = {
-            "lab": jnp.where(pg.v_mask, ids, INF32),
-            "info": jnp.zeros((pg.num_workers, 2), jnp.int32),
-        }
-        res = runtime.run_supersteps(pg, step, state0, max_steps=1,
-                                     backend=backend, mesh=mesh, mode=mode,
-                                     chunk_size=chunk_size)
-    elif variant in ("basic", "switch"):
-        # both variants share the min-label step; they differ only in the
-        # exchange that delivers neighbor labels
+        return VertexProgram(
+            name="wcc:prop", init=init, step=step, extract=extract,
+            max_steps=1, meta={"algorithm": "wcc", "variant": variant},
+        )
 
-        def exchange(ctx, gs, lab, active):
-            raw = gs.raw_out
+    # "basic" and "switch" share the min-label step; they differ only in
+    # the exchange that delivers neighbor labels
+    def exchange(ctx, gs, lab, active):
+        raw = gs.raw_out
 
-            def sparse(sub):
-                valid = raw.mask & active[raw.src_local]
-                inc, _, ovf = msg.combined_send(
-                    sub, raw.dst_global, valid, lab[raw.src_local], "min",
-                    capacity=ctx.n_loc,
-                )
-                return inc, ovf
-
-            if variant == "basic":
-                return sparse(ctx)
-
-            def dense(sub):
-                # static broadcast of every label: pads carry the identity
-                vals = jnp.where(gs.v_mask, lab, INF32)
-                inc = sc.broadcast_combine(sub, gs.scatter_out, vals, "min")
-                return inc, jnp.asarray(False)
-
-            frac = compose.global_fraction(
-                ctx, jnp.sum(active & gs.v_mask), jnp.sum(gs.v_mask)
+        def sparse(sub):
+            valid = raw.mask & active[raw.src_local]
+            inc, _, ovf = msg.combined_send(
+                sub, raw.dst_global, valid, lab[raw.src_local], "min",
+                capacity=ctx.n_loc,
             )
-            result, _ = compose.switch_by_density(
-                ctx, "wcc", frac, dense_threshold, dense, sparse
-            )
-            return result
+            return inc, ovf
 
-        def step(ctx, gs, state, step_idx):
-            lab, active = state["lab"], state["active"]
-            inc, overflow = exchange(ctx, gs, lab, active)
-            new = jnp.where(gs.v_mask, jnp.minimum(lab, inc), lab)
-            new_active = new != lab
-            halt = ~jnp.any(new_active)
-            return {"lab": new, "active": new_active}, halt, overflow
+        if variant == "basic":
+            return sparse(ctx)
 
-        state0 = {
+        def dense(sub):
+            # static broadcast of every label: pads carry the identity
+            vals = jnp.where(gs.v_mask, lab, INF32)
+            inc = sc.broadcast_combine(sub, gs.scatter_out, vals, "min")
+            return inc, jnp.asarray(False)
+
+        frac = compose.global_fraction(
+            ctx, jnp.sum(active & gs.v_mask), jnp.sum(gs.v_mask)
+        )
+        result, _ = compose.switch_by_density(
+            ctx, "wcc", frac, dense_threshold, dense, sparse
+        )
+        return result
+
+    def init(pg):
+        ids = pg.global_ids().astype(jnp.int32)
+        return {
             "lab": jnp.where(pg.v_mask, ids, INF32),
             "active": pg.v_mask,
         }
-        res = runtime.run_supersteps(pg, step, state0, max_steps=max_steps,
-                                     backend=backend, mesh=mesh, mode=mode,
-                                     chunk_size=chunk_size)
-    else:
-        raise ValueError(variant)
 
-    return pg.to_global(res.state["lab"]), res
+    def step(ctx, gs, state, step_idx):
+        lab, active = state["lab"], state["active"]
+        inc, overflow = exchange(ctx, gs, lab, active)
+        new = jnp.where(gs.v_mask, jnp.minimum(lab, inc), lab)
+        new_active = new != lab
+        halt = ~jnp.any(new_active)
+        return {"lab": new, "active": new_active}, halt, overflow
+
+    return VertexProgram(
+        name=f"wcc:{variant}", init=init, step=step, extract=extract,
+        max_steps=max_steps,
+        meta={"algorithm": "wcc", "variant": variant,
+              "dense_threshold": dense_threshold},
+    )
+
+
+def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
+        backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64,
+        dense_threshold: float = 0.1):
+    prog = program(variant=variant, max_steps=max_steps,
+                   dense_threshold=dense_threshold)
+    res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
+                             chunk_size=chunk_size)
+    return res.output, res

@@ -110,6 +110,10 @@ class ChannelContext:
     registry: ChannelRegistry = None
     stats_bytes: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
     stats_msgs: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # names that actually reached add_traffic (a host-side trace-time
+    # record — the runtime uses it to reject declared-but-never-traced
+    # channels without a dedicated dry trace)
+    touched: set = dataclasses.field(default_factory=set)
 
     def __post_init__(self):
         if self.registry is not None:
@@ -124,6 +128,7 @@ class ChannelContext:
         return jax.lax.axis_index(self.axis)
 
     def add_traffic(self, name: str, nbytes, nmsgs):
+        self.touched.add(name)
         if self.registry is not None and name not in self.registry.names:
             raise KeyError(
                 f"channel {name!r} is not in the registry {self.registry.names} "

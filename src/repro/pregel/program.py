@@ -1,0 +1,79 @@
+"""VertexProgram — a vertex-centric program as a first-class value.
+
+The paper's thesis (§III–V) is that the *channel interface* is the unit
+programmers compose; this module makes the same move one level up: a
+whole vertex program — its initial state, its superstep, the channels it
+declares, and how to read its answer back out — is a plain immutable
+value that can be stored in a registry, handed to an
+:class:`~repro.pregel.engine.Engine`, compiled once, and replayed across
+runs and same-shape graphs. Algorithm modules export
+``program(variant=..., **knobs) -> VertexProgram`` factories; the
+central registry (``repro.algorithms.REGISTRY``) and the ``python -m
+repro`` CLI are built on top of those factories.
+
+A program is *graph-shape agnostic*: ``init`` may read any host-side
+graph metadata (``pg.n``, ``pg.new_of_old`` …) to build the initial
+state, but ``step`` must depend on the graph only through its traced
+shard argument — that is what lets one compiled executable serve every
+graph with the same shape signature.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional, Tuple
+
+from repro.graph.pgraph import PartitionedGraph
+
+
+def _identity_extract(pg: PartitionedGraph, state: Any) -> Any:
+    return state
+
+
+@dataclasses.dataclass(eq=False)
+class VertexProgram:
+    """A declarative vertex-centric program.
+
+    name: stable identifier, conventionally ``"<algorithm>:<variant>"``.
+    init: ``init(pg) -> state0`` — per-vertex pytree with leading
+      ``(W, n_loc)`` leaves. May close over problem inputs (a SSSP
+      source, a pointer-jumping forest, …).
+    step: ``step(ctx, graph_shard, state_shard, step_idx)`` returning
+      ``(new_state, halt)`` or ``(new_state, halt, overflow)`` — exactly
+      the :func:`repro.pregel.runtime.run_supersteps` contract.
+    extract: ``extract(pg, final_state) -> output`` — the user-facing
+      answer (e.g. global labels in old-id space). Stored on
+      ``RunResult.output``.
+    channels: optional explicit channel declaration (stat-key names, a
+      composed channel with ``channel_names()``, or a mixed sequence).
+      Declared programs skip the runtime's eval_shape dry trace.
+    max_steps: default superstep budget (overridable per run).
+    check_overflow: whether capacity overflow aborts the run.
+    meta: free-form introspection data — the registry stores the
+      algorithm, variant and knobs here; nothing in the runtime reads it.
+
+    Programs hash by identity (``eq=False``): an Engine keys its compile
+    cache on the program *object*, so reuse the same instance — e.g. via
+    ``repro.algorithms.get_program`` — to reuse its compilations.
+    """
+
+    name: str
+    init: Callable[[PartitionedGraph], Any]
+    step: Callable
+    extract: Callable[[PartitionedGraph, Any], Any] = _identity_extract
+    channels: Optional[Any] = None
+    max_steps: int = 10_000
+    check_overflow: bool = True
+    meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def channel_names(self) -> Tuple[str, ...]:
+        """The declared stat-key set ('()' when relying on discovery)."""
+        if self.channels is None:
+            return ()
+        from repro.core import compose
+
+        return tuple(sorted(compose.channel_names_of(self.channels)))
+
+    def __repr__(self) -> str:  # compact — meta can hold arrays
+        chans = ",".join(self.channel_names()) or "<discovered>"
+        return (f"VertexProgram({self.name!r}, max_steps={self.max_steps}, "
+                f"channels=[{chans}])")

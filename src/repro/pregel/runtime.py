@@ -23,9 +23,19 @@ Orthogonally, three *execution modes* drive the superstep loop:
 The fused/chunked carries need a fixed-shape stats pytree, so the runtime
 performs a one-time dry trace (``jax.eval_shape`` — no compute) of the
 mapped step to discover the ``ChannelRegistry``: the set of channel names
-and their per-step stat shapes. Algorithms may also declare their
-channels explicitly via ``channels=(...)``; the discovered set is then
-validated against the declaration.
+and their per-step stat shapes. Programs that declare their channels
+explicitly via ``channels=(...)`` skip the dry trace entirely — the
+declaration *is* the registry, and ``ChannelContext.add_traffic``
+validates it lazily (a channel missing from the declaration raises the
+first time the step is traced for compilation).
+
+Compilation is split from execution: :func:`compile_supersteps` builds a
+:class:`CompiledSupersteps` whose executable takes the *graph as an
+argument* (not a closure constant), so one compile can be replayed
+across runs and across graphs with an identical shape signature — the
+contract ``repro.pregel.engine.Engine`` builds its compile cache on.
+:func:`run_supersteps` remains the one-shot convenience (compile, then
+execute once).
 
 Voting-to-halt: the step function returns a local halt vote; the runtime
 ANDs votes across workers (psum). In fused/chunked mode the AND result
@@ -64,10 +74,18 @@ class RunResult:
     dispatches: int = 0
     compile_time_s: float = 0.0
     # Host time spent *driving* the run — dispatch enqueues, flag/stat
-    # readbacks and Python bookkeeping — excluding device waits and (for
-    # host mode) the step-0 trace+compile. This is the per-superstep cost
-    # the fused modes amortize to once per dispatch.
+    # readbacks and Python bookkeeping — excluding device waits. This is
+    # the per-superstep cost the fused modes amortize to once per dispatch.
     host_overhead_s: float = 0.0
+    # Engine/session metadata (repro.pregel.engine): which VertexProgram
+    # produced this run, its extracted output, and the state of the
+    # engine's compile cache at run time. Plain run_supersteps calls leave
+    # these at their defaults.
+    program: str = ""
+    output: Any = None
+    cache_hit: bool = False
+    engine_compiles: int = 0
+    engine_cache_hits: int = 0
 
     @property
     def total_bytes(self) -> int:
@@ -111,6 +129,197 @@ def _host_int(v) -> int:
     return int(np.asarray(v).astype(np.int64).sum())
 
 
+def scrub_graph(graph: PartitionedGraph) -> PartitionedGraph:
+    """Drop the host-only static fields (``name``, ``new_of_old``) that
+    carry per-graph identity but never enter traced code. Two graphs with
+    identical shapes/caps scrub to identical pytree treedefs, which is
+    what lets one compiled executable serve both."""
+    return dataclasses.replace(graph, name="", new_of_old=None)
+
+
+def graph_signature(graph: PartitionedGraph):
+    """Hashable shape signature of a graph: the scrubbed pytree treedef
+    (all static caps/metadata) plus every leaf's shape and dtype. Equal
+    signatures <=> a compiled executable is reusable (and numerically
+    identical, since *all* remaining statics are part of the treedef)."""
+    leaves, treedef = jax.tree_util.tree_flatten(scrub_graph(graph))
+    return (treedef,
+            tuple((tuple(l.shape), str(jnp.dtype(l.dtype))) for l in leaves))
+
+
+def state_signature(state) -> Tuple:
+    """Hashable treedef+avals signature of a state pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    return (treedef,
+            tuple((tuple(jnp.shape(l)), str(jnp.result_type(l)))
+                  for l in leaves))
+
+
+@dataclasses.dataclass
+class CompiledSupersteps:
+    """A compiled superstep loop, reusable across runs.
+
+    The wrapped executable was AOT-compiled (``jit(...).lower().compile()``)
+    with the graph as an argument, so :meth:`execute` may be called many
+    times — with the original graph or any graph whose
+    :func:`graph_signature` matches — without ever re-tracing.
+    ``repro.pregel.engine.Engine`` caches these per (program, shape, mode).
+    """
+
+    mode: str
+    max_steps: int
+    check_overflow: bool
+    chunk_size: int
+    registry: Optional[ChannelRegistry]
+    compile_time_s: float
+    _fn: Callable
+
+    def execute(self, graph: PartitionedGraph, state0: Any) -> RunResult:
+        """One run. ``compile_time_s`` on the result is 0 — the caller
+        that paid the compile stamps it (run_supersteps / Engine miss)."""
+        # the executable was lowered against the scrubbed treedef, so any
+        # same-signature graph replays (name/new_of_old identity dropped)
+        graph = scrub_graph(graph)
+        if self.mode == "host":
+            return _exec_host(self._fn, graph, state0, self.max_steps,
+                              self.check_overflow)
+        if self.mode == "fused":
+            return _exec_fused(self._fn, graph, state0, self.check_overflow)
+        return _exec_chunked(self._fn, graph, state0, self.max_steps,
+                             self.check_overflow)
+
+
+def compile_supersteps(
+    graph: PartitionedGraph,
+    step_fn: Callable,
+    state0: Any,
+    max_steps: int = 10_000,
+    backend: str = "vmap",
+    mesh: Optional[jax.sharding.Mesh] = None,
+    axis: str = AXIS,
+    check_overflow: bool = True,
+    mode: Optional[str] = None,
+    chunk_size: int = 64,
+    channels: Optional[Any] = None,
+) -> CompiledSupersteps:
+    """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
+    shape, without running it. See :func:`run_supersteps` for semantics.
+    """
+    # lower against the scrubbed graph: the compiled treedef must not
+    # capture the host-only identity statics, or execute() could only
+    # ever be called with this exact graph object
+    graph = scrub_graph(graph)
+    W, n_loc = graph.num_workers, graph.n_loc
+    if mode is None:
+        mode = "fused"
+    if mode not in ("fused", "chunked", "host"):
+        raise ValueError(f"unknown execution mode {mode!r}")
+
+    traced_names: set = set()
+
+    def make_shard_step(registry: Optional[ChannelRegistry]):
+        def shard_step(g_shard, state_shard, step_idx):
+            ctx = ChannelContext(axis, W, n_loc, registry=registry)
+            out = step_fn(ctx, g_shard, state_shard, step_idx)
+            if len(out) == 3:
+                new_state, halt, overflow = out
+            else:
+                new_state, halt = out
+                overflow = jnp.asarray(False)
+            halt_all = aggregator.all_halted(ctx, halt)
+            overflow_any = jax.lax.psum(
+                jnp.asarray(overflow, jnp.int32), axis) > 0
+            traced_names.update(ctx.touched)  # host-side, at trace time
+            nbytes, nmsgs = ctx.stats()
+            return new_state, halt_all, overflow_any, nbytes, nmsgs
+
+        return shard_step
+
+    def map_shards(shard_step):
+        if backend == "vmap":
+            return jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
+        if backend == "shard_map":
+            assert mesh is not None
+            P = jax.sharding.PartitionSpec
+            return _shard_map(
+                shard_step,
+                mesh=mesh,
+                in_specs=(P(axis), P(axis), P()),
+                out_specs=(P(axis), P(), P(), P(), P()),
+            )
+        raise ValueError(backend)
+
+    # --- channel registry. A `channels=` declaration IS the registry (no
+    # dry trace at all — ChannelContext.add_traffic rejects undeclared
+    # names when the step is traced for compilation below). Without a
+    # declaration, the fused/chunked carries still need the fixed key set,
+    # so discover it with a one-time jax.eval_shape dry trace (no compute).
+    # Host mode consumes open per-step dicts and needs no registry. ------
+    registry = None
+    if channels is not None:
+        from repro.core import compose
+
+        names = compose.channel_names_of(channels)
+        # the mapped step's per-step stat leaf is (W,) under vmap (one
+        # scalar per logical worker) and () under shard_map (replicated)
+        stat_shape = (W,) if backend == "vmap" else ()
+        registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
+    elif mode in ("fused", "chunked"):
+        probe = map_shards(make_shard_step(None))
+        out_struct = jax.eval_shape(
+            probe, graph, state0, jnp.asarray(0, jnp.int32)
+        )
+        _, _, _, bytes_struct, _ = out_struct
+        registry = ChannelRegistry.from_stats_structure(bytes_struct)
+
+    mapped = map_shards(make_shard_step(registry))
+    i0 = jnp.asarray(0, jnp.int32)
+
+    tc = time.perf_counter()
+    if mode == "host":
+        fn = jax.jit(mapped).lower(graph, state0, i0).compile()
+    elif mode == "fused":
+        fn = (
+            jax.jit(_make_fused_loop(mapped, registry, max_steps,
+                                     check_overflow))
+            .lower(graph, state0)
+            .compile()
+        )
+    else:
+        f = jnp.zeros((), bool)
+        fn = (
+            jax.jit(_make_chunk(mapped, registry, max_steps, check_overflow,
+                                chunk_size))
+            .lower(graph, state0, i0, f, f)
+            .compile()
+        )
+    compile_s = time.perf_counter() - tc
+
+    # both validation directions without a dry trace: an undeclared
+    # traced channel raised from add_traffic during the AOT trace above;
+    # a declared-but-never-traced channel is caught here (it would
+    # otherwise report phantom zero rows forever)
+    if channels is not None:
+        phantom = set(registry.names) - traced_names
+        if phantom:
+            raise ValueError(
+                f"declared channels {tuple(sorted(phantom))} were never "
+                f"traced by the step function (traced: "
+                f"{tuple(sorted(traced_names))}) — stale or misspelled "
+                "declaration"
+            )
+
+    return CompiledSupersteps(
+        mode=mode,
+        max_steps=max_steps,
+        check_overflow=check_overflow,
+        chunk_size=chunk_size,
+        registry=registry,
+        compile_time_s=compile_s,
+        _fn=fn,
+    )
+
+
 def run_supersteps(
     graph: PartitionedGraph,
     step_fn: Callable,
@@ -131,82 +340,25 @@ def run_supersteps(
     third element `overflow` (bool) which the runtime surfaces as an error.
 
     mode: "fused" (default), "chunked", or "host" — see module docstring.
-    channels: optional explicit channel declaration, validated against
-      the dry-trace discovery (a mismatch is a programming error). Either
-      a sequence of stat-key names, a composed channel (any object with
+    channels: optional explicit channel declaration — a sequence of
+      stat-key names, a composed channel (any object with
       ``channel_names()``, e.g. ``repro.core.compose.Stacked``), or a
-      mixed sequence of both.
+      mixed sequence of both. Declared programs skip the eval_shape dry
+      trace; the declaration is validated lazily by
+      ``ChannelContext.add_traffic`` (an undeclared channel raises while
+      the step is traced for compilation).
+
+    Compiles per call; hold a ``repro.pregel.engine.Engine`` to reuse
+    compiles across runs and same-shape graphs.
     """
-    W, n_loc = graph.num_workers, graph.n_loc
-    if mode is None:
-        mode = "fused"
-    if mode not in ("fused", "chunked", "host"):
-        raise ValueError(f"unknown execution mode {mode!r}")
-
-    def make_shard_step(registry: Optional[ChannelRegistry]):
-        def shard_step(g_shard, state_shard, step_idx):
-            ctx = ChannelContext(axis, W, n_loc, registry=registry)
-            out = step_fn(ctx, g_shard, state_shard, step_idx)
-            if len(out) == 3:
-                new_state, halt, overflow = out
-            else:
-                new_state, halt = out
-                overflow = jnp.asarray(False)
-            halt_all = aggregator.all_halted(ctx, halt)
-            overflow_any = jax.lax.psum(
-                jnp.asarray(overflow, jnp.int32), axis) > 0
-            nbytes, nmsgs = ctx.stats()
-            return new_state, halt_all, overflow_any, nbytes, nmsgs
-
-        return shard_step
-
-    def map_shards(shard_step):
-        if backend == "vmap":
-            return jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
-        if backend == "shard_map":
-            assert mesh is not None
-            P = jax.sharding.PartitionSpec
-            return _shard_map(
-                shard_step,
-                mesh=mesh,
-                in_specs=(P(axis), P(axis), P()),
-                out_specs=(P(axis), P(), P(), P(), P()),
-            )
-        raise ValueError(backend)
-
-    # --- channel registry: one-time dry trace (no compute). Host mode
-    # consumes open per-step dicts and needs no fixed carry, so it skips
-    # the extra trace unless a declaration should be validated. ----------
-    registry = None
-    if mode in ("fused", "chunked") or channels is not None:
-        probe = map_shards(make_shard_step(None))
-        out_struct = jax.eval_shape(
-            lambda s, i: probe(graph, s, i), state0, jnp.asarray(0, jnp.int32)
-        )
-        _, _, _, bytes_struct, _ = out_struct
-        registry = ChannelRegistry.from_stats_structure(bytes_struct)
-        if channels is not None:
-            from repro.core import compose
-
-            declared = tuple(sorted(compose.channel_names_of(channels)))
-            if declared != registry.names:
-                raise ValueError(
-                    f"declared channels {declared} != traced channels "
-                    f"{registry.names}"
-                )
-
-    mapped = map_shards(make_shard_step(registry))
-
-    def one_step(state, step_idx):
-        return mapped(graph, state, step_idx)
-
-    if mode == "host":
-        return _run_host(one_step, state0, max_steps, check_overflow)
-    if mode == "fused":
-        return _run_fused(one_step, registry, state0, max_steps,
-                          check_overflow)
-    return _run_chunked(one_step, registry, state0, max_steps,
-                        check_overflow, chunk_size)
+    exe = compile_supersteps(
+        graph, step_fn, state0, max_steps=max_steps, backend=backend,
+        mesh=mesh, axis=axis, check_overflow=check_overflow, mode=mode,
+        chunk_size=chunk_size, channels=channels,
+    )
+    res = exe.execute(graph, state0)
+    res.compile_time_s = exe.compile_time_s
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -214,8 +366,7 @@ def run_supersteps(
 # ---------------------------------------------------------------------------
 
 
-def _run_host(one_step, state0, max_steps, check_overflow) -> RunResult:
-    stepper = jax.jit(one_step)
+def _exec_host(stepper, graph, state0, max_steps, check_overflow) -> RunResult:
     bytes_acc: Dict[str, int] = {}
     msgs_acc: Dict[str, int] = {}
     state = state0
@@ -227,7 +378,7 @@ def _run_host(one_step, state0, max_steps, check_overflow) -> RunResult:
     for step in range(max_steps):
         ts = time.perf_counter()
         state, halt_all, overflow, nbytes, nmsgs = stepper(
-            state, jnp.asarray(step, jnp.int32)
+            graph, state, jnp.asarray(step, jnp.int32)
         )
         t_enq = time.perf_counter()
         jax.block_until_ready(state)
@@ -243,10 +394,10 @@ def _run_host(one_step, state0, max_steps, check_overflow) -> RunResult:
         for k, v in nmsgs.items():
             msgs_acc[k] = msgs_acc.get(k, 0) + _host_int(v)
         halt_now = bool(np.asarray(halt_all).reshape(-1)[0])
-        # dispatch enqueue (step 0 is trace+compile — not counted) plus
-        # readback/bookkeeping time: the host cost of driving one step
-        if step > 0:
-            overhead += t_enq - ts
+        # dispatch enqueue plus readback/bookkeeping time: the host cost
+        # of driving one step (the stepper is AOT-compiled, so step 0 is
+        # an ordinary dispatch)
+        overhead += t_enq - ts
         overhead += time.perf_counter() - t_dev
         if halt_now:
             halted = True
@@ -271,11 +422,10 @@ def _run_host(one_step, state0, max_steps, check_overflow) -> RunResult:
 # ---------------------------------------------------------------------------
 
 
-def _run_fused(one_step, registry, state0, max_steps,
-               check_overflow) -> RunResult:
+def _make_fused_loop(mapped, registry, max_steps, check_overflow):
     zeros = registry.zeros()
 
-    def loop(state):
+    def loop(graph, state):
         def cond(carry):
             _, i, halted, overflow, _, _, _ = carry
             go = (~halted) & (i < max_steps)
@@ -285,7 +435,7 @@ def _run_fused(one_step, registry, state0, max_steps,
 
         def body(carry):
             state, i, _, overflow, nb, nm, wrapped = carry
-            new_state, halt, ovf, db, dm = one_step(state, i)
+            new_state, halt, ovf, db, dm = mapped(graph, state, i)
             nb2 = jax.tree_util.tree_map(jnp.add, nb, db)
             nm2 = jax.tree_util.tree_map(jnp.add, nm, dm)
             # per-step deltas are non-negative, so a decreasing accumulator
@@ -301,12 +451,12 @@ def _run_fused(one_step, registry, state0, max_steps,
                 jnp.zeros((), bool), zeros, zeros, jnp.zeros((), bool))
         return jax.lax.while_loop(cond, body, init)
 
-    tc = time.perf_counter()
-    compiled = jax.jit(loop).lower(state0).compile()
-    compile_s = time.perf_counter() - tc
+    return loop
 
+
+def _exec_fused(compiled, graph, state0, check_overflow) -> RunResult:
     t0 = time.perf_counter()
-    state, steps, halted, overflow, nb, nm, wrapped = compiled(state0)
+    state, steps, halted, overflow, nb, nm, wrapped = compiled(graph, state0)
     t_enq = time.perf_counter()
     jax.block_until_ready(state)
     t_dev = time.perf_counter()
@@ -341,7 +491,6 @@ def _run_fused(one_step, registry, state0, max_steps,
         step_times_s=[wall],
         mode="fused",
         dispatches=1,
-        compile_time_s=compile_s,
         host_overhead_s=overhead,
     )
 
@@ -352,12 +501,11 @@ def _run_fused(one_step, registry, state0, max_steps,
 # ---------------------------------------------------------------------------
 
 
-def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
-                 chunk_size) -> RunResult:
+def _make_chunk(mapped, registry, max_steps, check_overflow, chunk_size):
     K = max(1, min(chunk_size, max_steps))
     zeros = registry.zeros()
 
-    def chunk(state, i0, halted0, overflow0):
+    def chunk(graph, state, i0, halted0, overflow0):
         def body(carry, _):
             state, i, halted, overflow = carry
             stop = halted | (i >= max_steps)
@@ -366,7 +514,7 @@ def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
 
             def do(operand):
                 state, i = operand
-                new_state, halt, ovf, db, dm = one_step(state, i)
+                new_state, halt, ovf, db, dm = mapped(graph, state, i)
                 return ((new_state, i + 1, _scalar(halt),
                          overflow | _scalar(ovf)), (db, dm))
 
@@ -382,15 +530,12 @@ def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
         )
         return state, i, halted, overflow, db, dm
 
-    f = jnp.zeros((), bool)
-    tc = time.perf_counter()
-    compiled = (
-        jax.jit(chunk)
-        .lower(state0, jnp.asarray(0, jnp.int32), f, f)
-        .compile()
-    )
-    compile_s = time.perf_counter() - tc
+    return chunk
 
+
+def _exec_chunked(compiled, graph, state0, max_steps,
+                  check_overflow) -> RunResult:
+    f = jnp.zeros((), bool)
     bytes_acc: Dict[str, int] = {}
     msgs_acc: Dict[str, int] = {}
     state = state0
@@ -403,7 +548,7 @@ def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
     while True:
         ts = time.perf_counter()
         state, i, halted, overflow, db, dm = compiled(
-            state, i, halted, overflow
+            graph, state, i, halted, overflow
         )
         t_enq = time.perf_counter()
         jax.block_until_ready(state)
@@ -436,6 +581,6 @@ def _run_chunked(one_step, registry, state0, max_steps, check_overflow,
         step_times_s=chunk_times,
         mode="chunked",
         dispatches=dispatches,
-        compile_time_s=compile_s,
+        compile_time_s=0.0,
         host_overhead_s=overhead,
     )

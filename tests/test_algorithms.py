@@ -1,12 +1,29 @@
-"""All paper algorithms vs host oracles, every channel variant."""
+"""Registry-driven algorithm sweep + the paper's channel-property checks.
+
+The sweep is parametrized straight off ``repro.algorithms.REGISTRY``:
+every registered program×variant runs at small scale in all three
+execution modes, is verified against its host oracle
+(``repro/graph/oracles.py`` via each spec's ``check``), and is compared
+bit-for-bit against the backward-compatible module ``run()`` wrapper.
+Adding a variant to the registry adds it to the sweep — no test edits.
+
+Non-slow subset: fused mode on the cheap algorithms (the smoke tier);
+host/chunked modes and the heavy algorithms (sv/msf/scc) are @slow.
+"""
+import functools
+
 import numpy as np
-import jax.numpy as jnp
 import pytest
 
-from repro.graph import generators as gen
-from repro.graph import oracles, pgraph
-from repro.algorithms import (msf, pagerank, pointer_jumping, scc, sssp, sv,
-                              wcc)
+from repro.algorithms import REGISTRY, get_program
+from repro.graph import generators as gen, pgraph
+from repro.pregel.engine import Engine
+
+SEED = 0
+W = 4
+CHUNK = 3  # forces several dispatches in chunked mode
+MODES = ("fused", "host", "chunked")
+HEAVY = {"sv", "msf", "scc"}  # slow even in fused mode
 
 
 def canon(x):
@@ -14,163 +31,119 @@ def canon(x):
     return np.array([first.setdefault(v, i) for i, v in enumerate(x)])
 
 
-@pytest.fixture(scope="module")
-def rmat_directed():
-    return gen.rmat(9, edge_factor=4, seed=2)
+@functools.lru_cache(maxsize=None)
+def problem(key):
+    """(graph, pg, inputs, program) for a registry key — cached so the
+    three mode runs share one partition and one program instance."""
+    spec = REGISTRY[key]
+    graph = spec.make_graph(spec.test_scale, SEED)
+    pg = pgraph.partition_graph(graph, W, "random", build=spec.build)
+    inputs = spec.inputs(graph, SEED)
+    return graph, pg, inputs, spec.factory(**inputs)
 
 
-@pytest.fixture(scope="module")
-def rmat_sym(rmat_directed):
-    return rmat_directed.symmetrized()
+def sweep_params():
+    for key in sorted(REGISTRY):
+        spec = REGISTRY[key]
+        for mode in MODES:
+            slow = mode != "fused" or spec.algorithm in HEAVY
+            yield pytest.param(key, mode,
+                               marks=[pytest.mark.slow] if slow else [],
+                               id=f"{key}-{mode}")
 
 
-@pytest.fixture(scope="module")
-def pg_sym(rmat_sym):
-    return pgraph.partition_graph(
-        rmat_sym, 4, "random",
-        build=("scatter_out", "prop_out", "raw_out"),
-    )
+def assert_same_output(a, b):
+    if isinstance(a, dict):
+        assert a.keys() == b.keys()
+        for k in a:
+            assert_same_output(a[k], b[k])
+    elif isinstance(a, (int, float)):
+        assert a == b
+    else:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
-@pytest.mark.parametrize("variant", ["basic", "scatter"])
-def test_pagerank(rmat_directed, variant):
-    pg = pgraph.partition_graph(rmat_directed, 4, "random",
-                                build=("scatter_out", "raw_out"))
-    pr, res = pagerank.run(pg, iters=15, variant=variant)
-    want = oracles.pagerank_oracle(rmat_directed, iters=15)
-    np.testing.assert_allclose(pr, want, rtol=1e-4, atol=1e-7)
-    assert res.steps == 15
+@pytest.mark.parametrize("key,mode", sweep_params())
+def test_registry_sweep(key, mode):
+    spec = REGISTRY[key]
+    graph, pg, inputs, prog = problem(key)
+    res = Engine(mode=mode, chunk_size=CHUNK).run(prog, pg)
+    # 1. the program's answer matches the host oracle
+    spec.check(graph, pg, res, inputs)
+    # 2. the registry-driven run is bit-identical to the legacy wrapper
+    out_legacy, res_legacy = spec.legacy(pg, inputs, mode, CHUNK)
+    assert_same_output(res.output, out_legacy)
+    assert (res.steps, res.halted) == (res_legacy.steps, res_legacy.halted)
+    assert res.bytes_by_channel == res_legacy.bytes_by_channel
+    assert res.msgs_by_channel == res_legacy.msgs_by_channel
+
+
+# ---------------------------------------------------------------------------
+# paper channel properties (Tables IV-VII effects), via the registry API
+# ---------------------------------------------------------------------------
 
 
 @pytest.mark.slow
-def test_pagerank_scatter_fewer_bytes(rmat_directed):
-    pg = pgraph.partition_graph(rmat_directed, 4, "random",
+def test_pagerank_scatter_fewer_bytes():
+    g = gen.rmat(9, edge_factor=4, seed=2)
+    pg = pgraph.partition_graph(g, 4, "random",
                                 build=("scatter_out", "raw_out"))
-    _, res_b = pagerank.run(pg, iters=5, variant="basic")
-    _, res_s = pagerank.run(pg, iters=5, variant="scatter")
+    eng = Engine()
+    res_b = eng.run(get_program("pagerank:basic", iters=5), pg)
+    res_s = eng.run(get_program("pagerank:scatter", iters=5), pg)
     assert res_s.total_bytes < res_b.total_bytes  # ids removed from the wire
 
 
-@pytest.mark.parametrize("variant", ["basic", "reqresp"])
-@pytest.mark.parametrize("shape", ["chain", "tree"])
-def test_pointer_jumping(variant, shape):
-    n = 600
-    par = (gen.parent_chain(n, seed=1) if shape == "chain"
-           else gen.random_tree_parents(n, seed=1))
-    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
-    pg = pgraph.partition_graph(empty, 4, "random", build=())
-    roots_new, res = pointer_jumping.run(pg, par, variant=variant)
-    # oracle: root of each vertex via repeated jumping in numpy
-    p = par.copy()
-    for _ in range(n):
-        nxt = p[p]
-        if (nxt == p).all():
-            break
-        p = nxt
-    new = pg.new_of_old.arr
-    np.testing.assert_array_equal(roots_new, new[p])
-    assert res.halted and res.steps <= int(np.ceil(np.log2(n))) + 2
-
-
 def test_reqresp_fewer_bytes_on_tree():
-    n = 600
-    par = gen.random_tree_parents(n, seed=1)
-    empty = gen.EdgeList(n, np.zeros((0, 2), np.int64), None, True, "pj")
-    pg = pgraph.partition_graph(empty, 4, "random", build=())
-    _, res_b = pointer_jumping.run(pg, par, variant="basic")
-    _, res_r = pointer_jumping.run(pg, par, variant="reqresp")
+    spec = REGISTRY["pj:reqresp"]
+    graph, pg, inputs, prog_r = problem("pj:reqresp")
+    prog_b = REGISTRY["pj:basic"].factory(**inputs)
+    eng = Engine()
+    res_r = eng.run(prog_r, pg)
+    res_b = eng.run(prog_b, pg)
     assert res_r.total_bytes < res_b.total_bytes
-
-
-@pytest.mark.parametrize("variant", ["basic", "prop"])
-def test_wcc(rmat_sym, pg_sym, variant):
-    lab, res = wcc.run(pg_sym, variant=variant)
-    truth = gen.components_ground_truth(rmat_sym)
-    np.testing.assert_array_equal(canon(lab), canon(truth))
 
 
 def test_wcc_prop_fewer_global_rounds():
     g = gen.grid2d(20)
     pg = pgraph.partition_graph(g, 4, "bfs",
                                 build=("prop_out", "raw_out"))
-    _, res_b = wcc.run(pg, variant="basic")
-    lab, res_p = wcc.run(pg, variant="prop")
+    eng = Engine()
+    res_b = eng.run(get_program("wcc:basic"), pg)
+    res_p = eng.run(get_program("wcc:prop"), pg)
     rounds = int(np.asarray(res_p.state["info"])[:, 0].max())
     assert rounds < res_b.steps  # block-centric effect
     truth = gen.components_ground_truth(g)
-    np.testing.assert_array_equal(canon(lab), canon(truth))
-
-
-@pytest.mark.parametrize("variant", ["basic", "reqresp", "scatter", "both"])
-@pytest.mark.slow
-def test_sv(rmat_sym, pg_sym, variant):
-    lab, res = sv.run(pg_sym, variant=variant)
-    truth = gen.components_ground_truth(rmat_sym)
-    np.testing.assert_array_equal(canon(lab), canon(truth))
-    assert res.halted
+    np.testing.assert_array_equal(canon(res_p.output), canon(truth))
 
 
 @pytest.mark.slow
-def test_sv_composition_fewest_bytes(pg_sym):
-    totals = {}
-    for variant in ("basic", "reqresp", "scatter", "both"):
-        _, res = sv.run(pg_sym, variant=variant)
-        totals[variant] = res.total_bytes
+def test_sv_composition_fewest_bytes():
+    _, pg, _, _ = problem("sv:basic")
+    eng = Engine()
+    totals = {v: eng.run(get_program(f"sv:{v}"), pg).total_bytes
+              for v in ("basic", "reqresp", "scatter", "both")}
     assert totals["both"] < totals["reqresp"] < totals["basic"]
     assert totals["both"] < totals["scatter"] < totals["basic"]
 
 
-@pytest.mark.parametrize("variant", ["basic", "prop"])
-def test_sssp(variant):
-    g = gen.rmat(9, edge_factor=4, seed=5, weighted=True)
-    pg = pgraph.partition_graph(g, 4, "random", build=("prop_out", "raw_out"))
-    want = oracles.sssp_oracle(g, source=0)
-    dist, res = sssp.run(pg, 0, variant=variant)
-    finite = ~np.isinf(want)
-    np.testing.assert_allclose(dist[finite], want[finite], rtol=1e-5)
-    assert np.isinf(dist[~finite]).all()
-
-
-@pytest.mark.parametrize("variant", ["prop", "basic"])
-@pytest.mark.slow
-def test_scc(variant):
-    g = gen.rmat(8, edge_factor=3, seed=7)
-    pg = pgraph.partition_graph(
-        g, 4, "random",
-        build=("scatter_out", "scatter_in", "prop_out", "prop_in",
-               "raw_out", "raw_in"),
-    )
-    want = oracles.scc_oracle(g)
-    lab, res = scc.run(pg, variant=variant)
-    np.testing.assert_array_equal(canon(lab), canon(want))
-
-
-@pytest.mark.parametrize("variant", ["channels", "monolithic"])
-@pytest.mark.slow
-def test_msf(variant):
-    g = gen.rmat(8, edge_factor=4, seed=9, weighted=True).symmetrized()
-    pg = pgraph.partition_graph(g, 4, "random", build=("raw_out",))
-    want_w = oracles.msf_weight_oracle(g)
-    out, res = msf.run(pg, variant=variant)
-    assert abs(out["weight"] - want_w) < 1e-2
-    truth = gen.components_ground_truth(g)
-    assert out["edges"] == g.n - len(set(truth.tolist()))
-
-
 @pytest.mark.slow
 def test_msf_typed_channels_fewer_bytes():
-    g = gen.rmat(8, edge_factor=4, seed=9, weighted=True).symmetrized()
-    pg = pgraph.partition_graph(g, 4, "random", build=("raw_out",))
-    _, res_t = msf.run(pg, variant="channels")
-    _, res_m = msf.run(pg, variant="monolithic")
+    _, pg, _, _ = problem("msf:channels")
+    eng = Engine()
+    res_t = eng.run(get_program("msf:channels"), pg)
+    res_m = eng.run(get_program("msf:monolithic"), pg)
     # the paper reports 23-82% message reduction for heterogeneous-message
     # algorithms; ours is at least 50% here
     assert res_t.total_bytes < 0.5 * res_m.total_bytes
 
 
-def test_partitioners_all_give_correct_wcc(rmat_sym):
-    truth = gen.components_ground_truth(rmat_sym)
+def test_partitioners_all_give_correct_wcc():
+    g = gen.rmat(9, edge_factor=4, seed=2).symmetrized()
+    truth = gen.components_ground_truth(g)
+    prog = get_program("wcc:prop")
+    eng = Engine()
     for part in ("block", "random", "bfs"):
-        pg = pgraph.partition_graph(rmat_sym, 3, part, build=("prop_out",))
-        lab, _ = wcc.run(pg, variant="prop")
-        np.testing.assert_array_equal(canon(lab), canon(truth))
+        pg = pgraph.partition_graph(g, 3, part, build=("prop_out",))
+        res = eng.run(prog, pg)
+        np.testing.assert_array_equal(canon(res.output), canon(truth))

@@ -92,10 +92,12 @@ def test_composed_sv_beats_unoptimized(pg_small):
 
 
 def test_stacked_declaration_mismatch_raises(pg_small):
-    """A composed declaration that doesn't match the trace is an error."""
+    """A composed declaration that misses a traced channel is an error —
+    raised lazily by ChannelContext.add_traffic when the step is traced
+    for compilation (declared programs skip the eval_shape dry trace)."""
     chan = sv.composed_channels()
     wrong = compose.stacked("sv", pointer=chan.components["pointer"])
-    with pytest.raises(ValueError, match="declared channels"):
+    with pytest.raises(KeyError, match="not in the registry"):
         runtime.run_supersteps(
             pg_small, sv._composed_step(chan),
             {"D": pg_small.global_ids().astype(jnp.int32)},

@@ -1,0 +1,132 @@
+"""VertexProgram + Engine: compile-once sessions.
+
+The acceptance property: two same-shape graphs run through one Engine
+pay for exactly ONE compile — the second run is a cache hit, bit-exact
+against what a fresh compile would produce (the sweep in
+test_algorithms.py covers fresh-vs-legacy parity; here we pin the
+session/caching behavior itself).
+"""
+import numpy as np
+import pytest
+
+from repro.algorithms import REGISTRY, get_program, resolve, sssp
+from repro.graph import generators as gen, oracles, pgraph
+from repro.pregel.engine import Engine
+from repro.pregel import runtime
+
+
+def _weighted_pair(scale=8):
+    """Two graphs with identical topology (hence identical shape
+    signature) but different edge weights — different answers, one
+    executable."""
+    g1 = gen.rmat(scale, edge_factor=4, seed=5, weighted=True)
+    rng = np.random.default_rng(99)
+    w2 = rng.random(len(g1.edges)).astype(np.float32)
+    g2 = gen.EdgeList(g1.n, g1.edges, w2, g1.directed, "alt-weights")
+    build = ("prop_out", "raw_out")
+    pg1 = pgraph.partition_graph(g1, 4, "random", build=build)
+    pg2 = pgraph.partition_graph(g2, 4, "random", build=build)
+    return (g1, pg1), (g2, pg2)
+
+
+@pytest.mark.parametrize("mode", ("fused", "host", "chunked"))
+def test_one_compile_for_second_same_shape_graph(mode):
+    (g1, pg1), (g2, pg2) = _weighted_pair()
+    assert runtime.graph_signature(pg1) == runtime.graph_signature(pg2)
+
+    eng = Engine(mode=mode, chunk_size=4)
+    prog = sssp.program("basic", source=0)
+    r1 = eng.run(prog, pg1)
+    r2 = eng.run(prog, pg2)
+
+    # exactly one compile total: the second run reports a cache hit
+    assert eng.compiles == 1 and eng.cache_hits == 1
+    assert not r1.cache_hit and r2.cache_hit
+    assert r1.engine_compiles == 1 and r2.engine_compiles == 1
+    assert r2.engine_cache_hits == 1
+    assert r1.compile_time_s > 0.0 and r2.compile_time_s == 0.0
+
+    # the shared executable answers each instance correctly
+    for g, r in ((g1, r1), (g2, r2)):
+        want = oracles.sssp_oracle(g, source=0)
+        finite = ~np.isinf(want)
+        np.testing.assert_allclose(r.output[finite], want[finite], rtol=1e-5)
+    assert not np.array_equal(r1.output, r2.output)
+
+
+def test_compile_supersteps_executes_across_same_shape_graphs():
+    """The low-level API itself must honor the reuse contract: an
+    executable compiled against one graph runs any same-signature graph
+    (host-only identity statics are scrubbed out of the lowered treedef)."""
+    (g1, pg1), (g2, pg2) = _weighted_pair()
+    prog = sssp.program("basic", source=0)
+    exe = runtime.compile_supersteps(pg1, prog.step, prog.init(pg1),
+                                     max_steps=prog.max_steps)
+    for g, pg in ((g1, pg1), (g2, pg2)):
+        res = exe.execute(pg, prog.init(pg))
+        want = oracles.sssp_oracle(g, source=0)
+        finite = ~np.isinf(want)
+        np.testing.assert_allclose(pg.to_global(res.state["dist"])[finite],
+                                   want[finite], rtol=1e-5)
+
+
+def test_repeat_run_hits_cache_and_matches():
+    spec = REGISTRY["wcc:basic"]
+    g = spec.make_graph(8, 0)
+    pg = pgraph.partition_graph(g, 4, "random", build=spec.build)
+    prog = spec.make(g)
+    eng = Engine()
+    r1, r2 = eng.run_many(prog, [pg, pg])
+    assert eng.compiles == 1 and eng.cache_hits == 1
+    np.testing.assert_array_equal(r1.output, r2.output)
+    assert r1.bytes_by_channel == r2.bytes_by_channel
+    assert r1.program == r2.program == "wcc:basic"
+
+
+def test_different_shape_recompiles():
+    spec = REGISTRY["wcc:basic"]
+    eng = Engine()
+    prog = get_program("wcc:basic")
+    for scale in (7, 8):
+        g = spec.make_graph(scale, 0)
+        pg = pgraph.partition_graph(g, 4, "random", build=spec.build)
+        eng.run(prog, pg)
+    assert eng.compiles == 2 and eng.cache_hits == 0
+
+
+def test_max_steps_is_part_of_the_cache_key():
+    spec = REGISTRY["wcc:basic"]
+    g = spec.make_graph(8, 0)
+    pg = pgraph.partition_graph(g, 4, "random", build=spec.build)
+    prog = get_program("wcc:basic")
+    eng = Engine()
+    full = eng.run(prog, pg)
+    cut = eng.run(prog, pg, max_steps=2)
+    assert eng.compiles == 2  # a different superstep budget is a new loop
+    assert cut.steps == 2 and not cut.halted
+    assert full.halted
+
+
+def test_get_program_is_memoized():
+    assert get_program("wcc:switch") is get_program("wcc:switch")
+    assert get_program("wcc:switch") is not get_program("wcc:basic")
+    # knobs are part of the memo key
+    assert (get_program("pagerank:scatter", iters=5)
+            is not get_program("pagerank:scatter"))
+    # resolve() accepts bare algorithm names
+    assert resolve("wcc").variant == "prop"
+    with pytest.raises(KeyError, match="unknown program"):
+        resolve("nope")
+
+
+def test_engine_rejects_unknown_mode():
+    with pytest.raises(ValueError, match="unknown execution mode"):
+        Engine(mode="warp")
+
+
+def test_program_repr_and_channels():
+    prog = get_program("sv:composed")
+    names = prog.channel_names()
+    assert "sv/pointer/request" in names and "sv/jump" in names
+    assert "sv:composed" in repr(prog)
+    assert get_program("wcc:basic").channel_names() == ()

@@ -94,25 +94,54 @@ def test_max_steps_without_halt_parity(pg_small):
         assert r.steps == 2 and not r.halted, mode
 
 
-def test_explicit_channel_declaration(pg_small):
-    """Declared channels are validated against the dry trace."""
-    ids = pg_small.global_ids().astype(jnp.int32)
+def _declared_step(ctx, gs, state, i):
     from repro.core import message as msg
 
-    def step(ctx, gs, state, i):
-        inc, got, ovf = msg.combined_send(
-            ctx, gs.raw_out.dst_global, gs.raw_out.mask,
-            state["x"][gs.raw_out.src_local], "min", capacity=ctx.n_loc,
-        )
-        return {"x": jnp.minimum(state["x"], inc)}, i >= 1, ovf
+    inc, got, ovf = msg.combined_send(
+        ctx, gs.raw_out.dst_global, gs.raw_out.mask,
+        state["x"][gs.raw_out.src_local], "min", capacity=ctx.n_loc,
+    )
+    return {"x": jnp.minimum(state["x"], inc)}, i >= 1, ovf
 
-    state0 = {"x": ids}
-    res = runtime.run_supersteps(pg_small, step, state0, max_steps=2,
-                                 channels=("combined_message",))
-    assert res.steps == 2
-    with pytest.raises(ValueError, match="declared channels"):
-        runtime.run_supersteps(pg_small, step, state0, max_steps=2,
+
+def test_explicit_channel_declaration(pg_small):
+    """A full declaration runs; an undeclared-but-traced channel raises
+    lazily (from ChannelContext.add_traffic during compilation)."""
+    state0 = {"x": pg_small.global_ids().astype(jnp.int32)}
+    for mode in MODES:
+        res = runtime.run_supersteps(pg_small, _declared_step, state0,
+                                     max_steps=2, mode=mode,
+                                     channels=("combined_message",))
+        assert res.steps == 2
+    with pytest.raises(KeyError, match="not in the registry"):
+        runtime.run_supersteps(pg_small, _declared_step, state0, max_steps=2,
                                channels=("not_a_channel",))
+    # the other direction: a declared-but-never-traced channel would
+    # report phantom zero rows forever — caught at compile time too
+    with pytest.raises(ValueError, match="never traced"):
+        runtime.run_supersteps(pg_small, _declared_step, state0, max_steps=2,
+                               channels=("combined_message", "phantom"))
+
+
+def test_declared_channels_skip_dry_trace(pg_small, monkeypatch):
+    """channels= fully declares the registry: the eval_shape dry trace
+    must not run at all. Without a declaration it still must."""
+    state0 = {"x": pg_small.global_ids().astype(jnp.int32)}
+    calls = []
+    real = jax.eval_shape
+
+    def spy(*a, **kw):
+        calls.append(1)
+        return real(*a, **kw)
+
+    monkeypatch.setattr(jax, "eval_shape", spy)
+    res = runtime.run_supersteps(pg_small, _declared_step, state0,
+                                 max_steps=2, channels=("combined_message",))
+    assert res.steps == 2
+    assert not calls, "declared program still ran the eval_shape dry trace"
+
+    runtime.run_supersteps(pg_small, _declared_step, state0, max_steps=2)
+    assert calls, "undeclared program should discover via the dry trace"
 
 
 def test_overflow_raises_in_all_modes():
