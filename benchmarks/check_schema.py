@@ -1,0 +1,78 @@
+"""BENCH_*.json schema check: the artifact keys are a cross-PR contract.
+
+    PYTHONPATH=src python -m benchmarks.check_schema [extra.json ...]
+
+Downstream tooling (and the PR-over-PR comparisons in CHANGES.md) reads
+the committed ``BENCH_*.json`` artifacts by key; a benchmark refactor
+that silently renames or drops keys breaks those readers long after the
+PR lands. This checker pins the required top-level key set per artifact
+— run by ``scripts/tier1.sh`` (full mode) against every committed
+``BENCH_*.json`` plus any extra paths passed on the command line (e.g.
+a fresh smoke artifact). Extra keys are allowed (schemas may grow);
+missing keys fail.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+# Required top-level keys per artifact basename. Append when a benchmark
+# grows a field; never remove without bumping every reader.
+EXPECTED = {
+    "BENCH_paper_tables.json": {
+        "scale", "workers", "rows", "headline", "engine",
+    },
+    "BENCH_superstep_fusion.json": {
+        "n", "workers", "variant", "repeats", "chunk_size", "modes",
+        "overhead_reduction_fused", "overhead_reduction_chunked",
+    },
+    "BENCH_channel_dataplane.json": {
+        "workers", "dataset", "scales", "use_kernel_default",
+        "route_impl_default", "route", "combine", "headline",
+    },
+}
+
+# Required keys inside nested blocks (artifact basename -> path -> keys).
+NESTED = {
+    "BENCH_channel_dataplane.json": {
+        "headline": {"largest_scale", "route_speedup", "target"},
+    },
+}
+
+
+def check(path: pathlib.Path) -> list:
+    spec = EXPECTED.get(path.name)
+    if spec is None:
+        return [f"{path}: no schema registered for this artifact name"]
+    data = json.loads(path.read_text())
+    errors = []
+    missing = spec - set(data)
+    if missing:
+        errors.append(f"{path}: missing top-level keys {sorted(missing)}")
+    for block, keys in NESTED.get(path.name, {}).items():
+        sub = data.get(block, {})
+        gone = keys - set(sub)
+        if gone:
+            errors.append(f"{path}: missing {block!r} keys {sorted(gone)}")
+    return errors
+
+
+def main() -> int:
+    paths = [pathlib.Path(p) for p in sys.argv[1:]]
+    paths += sorted(pathlib.Path(".").glob("BENCH_*.json"))
+    if not paths:
+        print("check_schema: no BENCH_*.json artifacts found")
+        return 1
+    errors = []
+    for path in dict.fromkeys(paths):  # dedup, keep order
+        errs = check(path)
+        errors.extend(errs)
+        print(f"  {path}: {'FAILED' if errs else 'ok'}")
+    for e in errors:
+        print(f"check_schema: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -29,4 +29,12 @@ python examples/graph_analytics.py --scale 9 --workers 4
 echo "== CLI (registry-driven) =="
 python -m repro list
 python -m repro run wcc --scale 9
+
+echo "== data-plane benchmark (smoke) + BENCH schema check =="
+smoke_dir="$(mktemp -d)"
+trap 'rm -rf "$smoke_dir"' EXIT
+python -m benchmarks.channel_dataplane --scale 10 --repeats 2 \
+  --out "$smoke_dir/BENCH_channel_dataplane.json"
+# the smoke artifact and every committed BENCH_*.json share one schema
+python -m benchmarks.check_schema "$smoke_dir/BENCH_channel_dataplane.json"
 echo "tier1: all stages pass"

@@ -165,7 +165,7 @@ def program(variant: str = "both", *, max_steps: int = 200,
             from repro.kernels import ops as kops
             inc = kops.segment_combine(
                 jnp.where(deliv.mask, deliv.payload["v"], INF32),
-                deliv.dst_local, ctx.n_loc, "min")
+                deliv.dst_local, ctx.n_loc, "min", use_kernel=False)
             return inc, deliv.overflow
         inc, got, ovf = msg.combined_send(
             ctx, raw.dst_global, raw.mask, vals[raw.src_local], "min",
@@ -189,9 +189,11 @@ def program(variant: str = "both", *, max_steps: int = 200,
             deliv = msg.direct_send(ctx, d, cond, {"t": t},
                                     capacity=ctx.n_loc, name="mono_message")
             from repro.kernels import ops as kops
+            # receiver-side combine over unsorted delivery order: always
+            # the reference path (kernel wants sorted segment ids)
             minval = kops.segment_combine(
                 jnp.where(deliv.mask, deliv.payload["t"], INF32),
-                deliv.dst_local, ctx.n_loc, "min")
+                deliv.dst_local, ctx.n_loc, "min", use_kernel=False)
             got = minval != INF32
             ovf3 = deliv.overflow
         else:
@@ -217,9 +219,9 @@ def program(variant: str = "both", *, max_steps: int = 200,
 
 def run(pg: PartitionedGraph, variant: str = "both", max_steps: int = 200,
         backend: str = "vmap", mesh=None, use_kernel: bool = False,
-        mode=None, chunk_size: int = 64):
+        mode=None, chunk_size: int = 64, route_impl=None):
     prog = program(variant=variant, max_steps=max_steps,
                    use_kernel=use_kernel)
     res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
-                             chunk_size=chunk_size)
+                             chunk_size=chunk_size, route_impl=route_impl)
     return res.output, res

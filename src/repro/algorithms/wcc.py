@@ -4,12 +4,14 @@ Variants:
   - "basic":  per-superstep CombinedMessage: changed vertices send their
               label to all neighbors (Pregel/HCC style, O(diameter) steps).
   - "prop":   the Propagation channel (local fixpoint between exchanges).
-  - "switch": the composition layer's density switch (paper §V,
-              ``repro.core.compose.switch_by_density``): each superstep
-              picks the ScatterCombine broadcast (dense — static plan, no
-              ids on the wire) when the active fraction is at or above
-              ``dense_threshold``, and the CombinedMessage push (sparse —
-              only changed labels travel) below it. Labels, supersteps
+  - "switch": the density-adaptive data plane (paper §V,
+              ``repro.core.compose.density_adaptive_combine``): each
+              superstep the live frontier fraction (from the loop carry)
+              picks the *planned* ScatterCombine broadcast (dense —
+              static positional plan, no ids on the wire) at or above
+              ``dense_threshold``, and the *routed* CombinedMessage push
+              (sparse — bucket-routed, only changed labels travel)
+              below it. Labels, supersteps
               and halting are bit-identical to "basic" (min-label is
               idempotent; re-broadcasting an unchanged label never
               changes the minimum) — only the traffic profile moves,
@@ -29,7 +31,6 @@ import jax.numpy as jnp
 from repro.core import compose
 from repro.core import message as msg
 from repro.core import propagation as prop
-from repro.core import scatter_combine as sc
 from repro.graph.pgraph import PartitionedGraph
 from repro.pregel import engine
 from repro.pregel.program import VertexProgram
@@ -74,31 +75,30 @@ def program(variant: str = "prop", *, max_steps: int = 10_000,
     # the exchange that delivers neighbor labels
     def exchange(ctx, gs, lab, active):
         raw = gs.raw_out
+        valid = raw.mask & active[raw.src_local]
 
-        def sparse(sub):
-            valid = raw.mask & active[raw.src_local]
+        if variant == "basic":
             inc, _, ovf = msg.combined_send(
-                sub, raw.dst_global, valid, lab[raw.src_local], "min",
+                ctx, raw.dst_global, valid, lab[raw.src_local], "min",
                 capacity=ctx.n_loc,
             )
             return inc, ovf
 
-        if variant == "basic":
-            return sparse(ctx)
-
-        def dense(sub):
-            # static broadcast of every label: pads carry the identity
-            vals = jnp.where(gs.v_mask, lab, INF32)
-            inc = sc.broadcast_combine(sub, gs.scatter_out, vals, "min")
-            return inc, jnp.asarray(False)
-
+        # density-adaptive data plane: the live frontier fraction (from
+        # the carry) picks the planned broadcast (dense) or the routed
+        # compact push (sparse) each superstep
         frac = compose.global_fraction(
             ctx, jnp.sum(active & gs.v_mask), jnp.sum(gs.v_mask)
         )
-        result, _ = compose.switch_by_density(
-            ctx, "wcc", frac, dense_threshold, dense, sparse
+        inc, ovf, _ = compose.density_adaptive_combine(
+            ctx, "wcc", frac, dense_threshold,
+            plan=gs.scatter_out,
+            dense_vals=jnp.where(gs.v_mask, lab, INF32),
+            dst=raw.dst_global, valid=valid,
+            sparse_vals=lab[raw.src_local],
+            combiner="min", capacity=ctx.n_loc,
         )
-        return result
+        return inc, ovf
 
     def init(pg):
         ids = pg.global_ids().astype(jnp.int32)
@@ -125,9 +125,9 @@ def program(variant: str = "prop", *, max_steps: int = 10_000,
 
 def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
         backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64,
-        dense_threshold: float = 0.1):
+        dense_threshold: float = 0.1, route_impl=None):
     prog = program(variant=variant, max_steps=max_steps,
                    dense_threshold=dense_threshold)
     res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,
-                             chunk_size=chunk_size)
+                             chunk_size=chunk_size, route_impl=route_impl)
     return res.output, res

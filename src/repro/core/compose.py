@@ -24,6 +24,11 @@ code:
     unconditionally); the selector decides which *result* is used and
     which branch's *traffic* is accounted — consistent with how this
     library counts logical messages everywhere (see ``propagation``).
+    ``density_adaptive_combine`` is the canonical instance: the same
+    logical neighborhood combine as a *planned* positional
+    scatter-combine (dense frontiers) vs a *routed* compact
+    combined-message push (sparse frontiers), decided per superstep by
+    live frontier density from the loop carry.
 
 Composition never changes a channel's semantics: every combinator is a
 pure function over the same per-shard arrays, so composed programs run
@@ -303,6 +308,64 @@ def switch_by_density(
         lambda a, b: jnp.where(use_dense, a, b), d_out, s_out
     )
     return result, use_dense
+
+
+def density_adaptive_combine(
+    ctx: ChannelContext,
+    name: str,
+    density,
+    threshold: float,
+    *,
+    plan,
+    dense_vals: jax.Array,
+    dst: jax.Array,
+    valid: jax.Array,
+    sparse_vals: jax.Array,
+    combiner,
+    capacity: int,
+    use_kernel=None,
+    edge_transform=None,
+):
+    """Routed-vs-planned exchange for one logical neighborhood combine,
+    selected by live frontier density.
+
+    The two implementations of the same logical exchange are the two ends
+    of the data plane: the *planned* positional ScatterCombine broadcast
+    (``plan`` + ``dense_vals`` — static routing, no ids on the wire, cost
+    independent of the frontier) and the *routed* CombinedMessage push
+    (``dst``/``valid``/``sparse_vals`` — one-pass bucket routing, ids on
+    the wire but only active messages travel). ``density`` must be
+    worker-uniform and should come from the loop carry (e.g.
+    ``global_fraction(ctx, active & v_mask, v_mask)``) — the decision
+    tracks the frontier *live*, per superstep, inside the fused loop.
+
+    Returns ``(combined (n_loc,[D]) — combiner identity where nothing
+    arrived, overflow, use_dense)``; traffic lands under
+    ``<name>/dense/scatter_combine`` vs ``<name>/sparse/combined_message``.
+    """
+
+    def dense(sub):
+        from repro.core import scatter_combine as sc
+
+        out = sc.broadcast_combine(
+            sub, plan, dense_vals, combiner,
+            edge_transform=edge_transform, use_kernel=use_kernel,
+        )
+        return out, jnp.asarray(False)
+
+    def sparse(sub):
+        from repro.core import message as msg
+
+        out, _, ovf = msg.combined_send(
+            sub, dst, valid, sparse_vals, combiner, capacity=capacity,
+            use_kernel=use_kernel,
+        )
+        return out, ovf
+
+    (result, overflow), use_dense = switch_by_density(
+        ctx, name, density, threshold, dense, sparse
+    )
+    return result, overflow, use_dense
 
 
 # ---------------------------------------------------------------------------

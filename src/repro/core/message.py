@@ -3,8 +3,19 @@
 DirectMessage — arbitrary (dst, payload) messages; the receiver iterates
 over deliveries. CombinedMessage — a combiner is applied both sender-side
 (per destination, before the exchange) and receiver-side, yielding a dense
-per-vertex combined value. Both use dynamic sort-based routing, and both
+per-vertex combined value. Both use the dynamic routed exchange
+(``repro.core.routing``, one-pass bucket routing by default), and both
 put destination ids on the wire — the costs the optimized channels remove.
+
+The CombinedMessage sender-side combine is sort-free: the
+unique-destination list is compacted with a counting prefix-sum
+(``routing.dedup_dense``) and values are reduced directly in that
+compact space — O(M·W + N) work with only an int32 histogram as the
+N-sized transient, no ``argsort`` anywhere on the dynamic data plane
+(non-lattice combiners such as ``min_by_first`` still sort inside their
+``segment_reduce``). ``id_bytes`` are charged once per *wire* message
+(the post-dedup, capacity-packed sends that actually cross a worker
+boundary), never per enqueued send.
 
 Registry contract (fused runtime): every send is traced unconditionally —
 an empty `valid` mask yields zero accounted traffic rather than a skipped
@@ -34,6 +45,24 @@ class Delivery:
     overflow: jax.Array    # () bool
 
 
+def _delivery(ctx: ChannelContext, routed: routing.Routed, capacity: int):
+    """Flatten a Routed into per-message local-index delivery form."""
+    w, c = ctx.num_workers, capacity
+    flat = jax.tree_util.tree_map(
+        lambda x: x.reshape((w * c,) + x.shape[2:]), routed.payload
+    )
+    ids = routed.ids.reshape(-1)
+    dst_local = jnp.where(
+        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
+    ).astype(jnp.int32)
+    return Delivery(
+        dst_local=dst_local,
+        payload=flat,
+        mask=routed.mask.reshape(-1),
+        overflow=routed.overflow,
+    )
+
+
 def direct_send(
     ctx: ChannelContext,
     dst: jax.Array,
@@ -55,20 +84,7 @@ def direct_send(
     width = id_bytes + (wire_width if wire_width is not None
                         else payload_width(payload))
     ctx.add_traffic(name, remote * width, remote)
-    w, c = ctx.num_workers, capacity
-    flat = jax.tree_util.tree_map(
-        lambda x: x.reshape((w * c,) + x.shape[2:]), routed.payload
-    )
-    ids = routed.ids.reshape(-1)
-    dst_local = jnp.where(
-        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
-    ).astype(jnp.int32)
-    return Delivery(
-        dst_local=dst_local,
-        payload=flat,
-        mask=routed.mask.reshape(-1),
-        overflow=routed.overflow,
-    )
+    return _delivery(ctx, routed, capacity)
 
 
 def combined_send(
@@ -92,45 +108,36 @@ def combined_send(
     squeeze = vals.ndim == 1
     v = vals[:, None] if squeeze else vals
     m, d = v.shape
+    n_total = ctx.num_workers * ctx.n_loc
     ident = combiner.ident_for(v.dtype)
 
-    # sender-side combine: sort by dst, reduce runs, keep one entry per dst
-    key = jnp.where(valid, dst.astype(jnp.int32), routing.BIG)
-    order = jnp.argsort(key)
-    sdst = key[order]
-    sval = jnp.where((sdst != routing.BIG)[:, None], v[order], ident)
-    prev = jnp.concatenate([jnp.full((1,), -1, sdst.dtype), sdst[:-1]])
-    first = (sdst != prev) & (sdst != routing.BIG)
-    run = jnp.cumsum(first.astype(jnp.int32)) - 1  # run id per sorted pos
-    run = jnp.where(sdst != routing.BIG, run, m)
-    combined = kops.segment_combine(
-        sval, run, m, combiner, use_kernel=use_kernel, assume_sorted=True
-    )  # (m, d) value per run id
-    # unique dst per run id
-    u_dst = jnp.full((m + 1,), routing.BIG, jnp.int32)
-    u_dst = u_dst.at[jnp.where(first, run, m)].set(sdst, mode="drop")
-    u_dst = u_dst[:m]
+    # sender-side combine, sort-free: compact the occupied destinations
+    # into an ascending unique list (counting prefix-sum over the id
+    # space), then reduce the values directly in that compact space —
+    # the only O(N_global) transient is dedup_dense's int32 histogram;
+    # values never materialize densely.
+    u_dst, pos = routing.dedup_dense(dst, valid, n_total)
+    u_valid = u_dst != routing.BIG
+    seg = jnp.where(
+        valid, pos[jnp.clip(dst.astype(jnp.int32), 0, n_total - 1)], m
+    )
+    u_vals = combiner.segment_reduce(v, seg, m)  # (m, d), u_dst-aligned
 
     routed = routing.route(
-        ctx, u_dst, u_dst != routing.BIG, {"v": combined}, capacity
+        ctx, u_dst, u_valid, {"v": u_vals}, capacity, use_kernel=use_kernel
     )
     remote = routing.remote_count(ctx, routed.sent_count)
     width = 4 + (wire_width if wire_width is not None
                  else d * jnp.dtype(v.dtype).itemsize)
     ctx.add_traffic(name, remote * width, remote)
 
-    w, c = ctx.num_workers, capacity
-    flat_v = routed.payload["v"].reshape(w * c, d)
-    ids = routed.ids.reshape(-1)
-    dst_local = jnp.where(
-        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
-    ).astype(jnp.int32)
-    flat_v = jnp.where(routed.mask.reshape(-1)[:, None], flat_v, ident)
-    out = kops.segment_combine(flat_v, dst_local, ctx.n_loc, combiner,
+    deliv = _delivery(ctx, routed, capacity)
+    flat_v = jnp.where(deliv.mask[:, None], deliv.payload["v"], ident)
+    out = kops.segment_combine(flat_v, deliv.dst_local, ctx.n_loc, combiner,
                                use_kernel=False)
     got = (
         jax.ops.segment_sum(
-            routed.mask.reshape(-1).astype(jnp.int32), dst_local, ctx.n_loc
+            deliv.mask.astype(jnp.int32), deliv.dst_local, ctx.n_loc
         )
         > 0
     )
@@ -153,12 +160,4 @@ def monolithic_send(
     routed = routing.route(ctx, dst, valid, payload, capacity)
     remote = routing.remote_count(ctx, routed.sent_count)
     ctx.add_traffic(name, remote * (4 + pad_width), remote)
-    w, c = ctx.num_workers, capacity
-    flat = jax.tree_util.tree_map(
-        lambda x: x.reshape((w * c,) + x.shape[2:]), routed.payload
-    )
-    ids = routed.ids.reshape(-1)
-    dst_local = jnp.where(
-        routed.mask.reshape(-1), ids - ctx.me() * ctx.n_loc, ctx.n_loc
-    ).astype(jnp.int32)
-    return Delivery(dst_local, flat, routed.mask.reshape(-1), routed.overflow)
+    return _delivery(ctx, routed, capacity)

@@ -1,11 +1,14 @@
 """Request-Respond channel (paper §IV-C2).
 
 Every vertex may request an attribute of any other vertex. The channel
-dedups requests to the same destination per worker (sort + unique), sends
-only unique ids, and the responder replies with a *positionally ordered
-value list* — no ids on the respond wire. This is the paper's fix for the
+dedups requests to the same destination per worker (a counting
+prefix-sum compaction — ``routing.dedup_dense``, no sort), sends only
+unique ids, and the responder replies with a *positionally ordered value
+list* — no ids on the respond wire. This is the paper's fix for the
 respond-phase imbalance caused by high-degree vertices, plus its byte
-trick (reply in request order).
+trick (reply in request order). Traffic is charged per *wire* message:
+the post-dedup unique ids on the request wire, the positional values on
+the respond wire.
 
 Registry contract (fused runtime): the channel contributes two fixed stat
 keys — ``<name>/request`` and ``<name>/respond`` — on every trace, even
@@ -45,16 +48,10 @@ def request(
     rv = respond_vals[:, None] if squeeze else respond_vals
     d = rv.shape[-1]
     r = dst.shape[0]
+    n_total = ctx.num_workers * ctx.n_loc
 
-    # --- dedup: sort by destination, keep one entry per unique dst ---
-    key = jnp.where(valid, dst.astype(jnp.int32), routing.BIG)
-    order = jnp.argsort(key)
-    sdst = key[order]
-    prev = jnp.concatenate([jnp.full((1,), -1, sdst.dtype), sdst[:-1]])
-    first = (sdst != prev) & (sdst != routing.BIG)
-    run = jnp.cumsum(first.astype(jnp.int32)) - 1
-    u_dst = jnp.full((r + 1,), routing.BIG, jnp.int32)
-    u_dst = u_dst.at[jnp.where(first, run, r)].set(sdst, mode="drop")[:r]
+    # --- dedup: one compact entry per unique destination (sort-free) ---
+    u_dst, pos = routing.dedup_dense(dst, valid, n_total)
     u_valid = u_dst != routing.BIG
 
     # --- request phase: ids only ---
@@ -66,13 +63,13 @@ def request(
     lidx = jnp.where(routed.mask, routed.ids - ctx.me() * ctx.n_loc, ctx.n_loc)
     rv_pad = jnp.concatenate([rv, jnp.zeros((1, d), rv.dtype)], axis=0)
     resp = rv_pad[jnp.clip(lidx, 0, ctx.n_loc)]  # (W, C, D)
-    back = routing.reply(ctx, routed, {"v": resp}, m=r)["v"]  # (R, D) per-unique
+    back = routing.reply(ctx, routed, {"v": resp})["v"]  # (R, D) per-unique
     ctx.add_traffic(
         name + "/respond", remote * d * jnp.dtype(rv.dtype).itemsize, remote
     )
 
-    # --- expand to all requests (sorted order), then un-permute ---
-    per_sorted = back[jnp.clip(run, 0, r - 1)]
-    per_sorted = jnp.where((sdst != routing.BIG)[:, None], per_sorted, 0)
-    out = jnp.zeros((r, d), rv.dtype).at[order].set(per_sorted, mode="drop")
+    # --- expand to all requests: each request gathers its unique row ---
+    idx = pos[jnp.clip(dst.astype(jnp.int32), 0, n_total - 1)]
+    per_req = back[jnp.clip(idx, 0, max(r - 1, 0))]
+    out = jnp.where(valid[:, None], per_req, 0)
     return (out[:, 0] if squeeze else out), routed.overflow

@@ -1,26 +1,82 @@
-"""Dynamic sort-based message routing (the TPU stand-in for hash routing)
-— the exchange beneath the paper's standard message channels (Table I).
+"""Dynamic message routing — the exchange beneath the paper's standard
+message channels (Table I).
 
 Messages are (destination-global-id, payload) pairs with a validity mask.
-Routing sorts by destination, buckets by owner (contiguous in the sorted
-order because ownership is by id range), packs into a capacity-bounded
-(W, C, ...) buffer and exchanges it with one tiled ``all_to_all``.
+Ownership is by contiguous id range, so a routed exchange only needs
+*owner order*, not full destination order: each message's wire slot is
+``owner * C + rank`` (rank = stable arrival rank within the owner
+bucket), the packed (W, C, ...) buffer is exchanged with one tiled
+``all_to_all``. Two interchangeable implementations compute the slots:
+
+  - ``"bucket"`` (default): one-pass counting sort — per-owner histogram
+    + stable rank + scatter. O(M·W) work / O(M) depth with the worker
+    count W as the one-hot lane width, so it is the win whenever W is a
+    modest constant (the regime of this library; at very large W the
+    comparison narrows). Backed by the Pallas kernel
+    (``repro.kernels.bucket_route``) on TPU and a pure-jnp reference
+    elsewhere (``repro.kernels.ops.bucket_ranks`` decides, see the
+    config surface there).
+  - ``"sort"``: the legacy O(M log M) stable ``argsort`` over owners —
+    kept as the measured baseline (``benchmarks/channel_dataplane.py``).
+
+Both produce **bit-identical** ``Routed`` results (same slots, same
+counts, same packing), so channels and compositions are oblivious to the
+choice; select per call (``impl=``), per compile
+(:func:`impl_scope` — what ``Engine(route_impl=...)`` uses), or via the
+``REPRO_ROUTE_IMPL`` environment variable.
 
 Used by DirectMessage / CombinedMessage / RequestRespond; the
 scatter-combine channel avoids all of this via its static plan — that gap
 is exactly the optimization the paper measures.
+
+Traffic accounting contract: ``sent_count`` counts *wire* messages —
+valid entries actually packed into a peer's capacity-bounded block
+(post-dedup, since deduping channels route their deduped id list).
+Enqueued sends beyond the capacity latch ``overflow`` but are never
+charged: they never reach the wire.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any
+import os
+from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.channel import TRAFFIC_DTYPE
+from repro.kernels import ops as kops
 
 BIG = jnp.iinfo(jnp.int32).max
+
+IMPLS = ("bucket", "sort")
+
+_IMPL_OVERRIDE: Optional[str] = None
+
+
+def resolve_impl(impl: Optional[str] = None) -> str:
+    """The routing implementation for a call site: explicit argument,
+    else the :func:`impl_scope` override, else ``REPRO_ROUTE_IMPL``,
+    else ``"bucket"``."""
+    impl = impl or _IMPL_OVERRIDE or os.environ.get("REPRO_ROUTE_IMPL")
+    impl = impl or "bucket"
+    if impl not in IMPLS:
+        raise ValueError(f"unknown routing impl {impl!r} (one of {IMPLS})")
+    return impl
+
+
+@contextlib.contextmanager
+def impl_scope(impl: Optional[str]):
+    """Pin the routing impl for every route() under the scope
+    (trace-time: wrap the compile, not the execution)."""
+    global _IMPL_OVERRIDE
+    prev = _IMPL_OVERRIDE
+    _IMPL_OVERRIDE = None if impl is None else resolve_impl(impl)
+    try:
+        yield
+    finally:
+        _IMPL_OVERRIDE = prev
 
 
 @dataclasses.dataclass
@@ -31,20 +87,40 @@ class Routed:
     mask: jax.Array       # (W, C) bool
     payload: Any          # pytree of (W, C, ...) arrays
     # sender-side bookkeeping for positional reply (RequestRespond):
-    order: jax.Array      # (M,) argsort permutation used
-    slot: jax.Array       # (M,) slot of each *sorted* message (W*C = dropped)
-    sent_count: jax.Array  # (W,) messages sent per peer
+    slot: jax.Array       # (M,) wire slot per ORIGINAL message (W*C = dropped)
+    sent_count: jax.Array  # (W,) wire messages packed per peer
     overflow: jax.Array   # () bool — capacity exceeded (surfaced, not silent)
 
 
-def _pack(leaf_sorted, slot, cap, fill):
-    shape = (cap + 1,) + leaf_sorted.shape[1:]
-    buf = jnp.full(shape, fill, leaf_sorted.dtype)
-    buf = buf.at[slot].set(leaf_sorted, mode="drop")
-    return buf[:cap]
+def _slots_sort(key, w: int):
+    """Legacy baseline: stable argsort over owners, rank by position.
+    Same (rank, count) contract as ``kops.bucket_ranks`` — validity is
+    already encoded in ``key`` (invalid = the ``w`` sentinel); capacity
+    is applied by the caller."""
+    m = key.shape[0]
+    order = jnp.argsort(key)  # stable: ties keep original order
+    skey = key[order]
+    bounds = jnp.searchsorted(
+        skey, jnp.arange(w + 1, dtype=jnp.int32), side="left"
+    ).astype(jnp.int32)
+    pos = jnp.arange(m, dtype=jnp.int32)
+    rank_sorted = pos - bounds[jnp.minimum(skey, w - 1)]
+    # scatter ranks back to original message positions
+    rank = jnp.zeros((m,), jnp.int32).at[order].set(rank_sorted)
+    return rank, bounds[1:] - bounds[:-1]
 
 
-def route(ctx, dst, valid, payload, capacity: int, *, exchange_payload=True):
+def route(
+    ctx,
+    dst,
+    valid,
+    payload,
+    capacity: int,
+    *,
+    exchange_payload=True,
+    impl: Optional[str] = None,
+    use_kernel: Optional[bool] = None,
+):
     """Route messages to the owners of their destination vertices.
 
     Args:
@@ -53,61 +129,65 @@ def route(ctx, dst, valid, payload, capacity: int, *, exchange_payload=True):
       valid: (M,) bool.
       payload: pytree of (M, ...) arrays (may be empty dict).
       capacity: per-peer slot capacity C.
+      impl: "bucket" | "sort" | None (resolve via scope/env/default).
+      use_kernel: kernel-vs-reference for the bucket path (None = config).
     Returns:
       Routed — received ids/mask/payload plus sender bookkeeping.
     """
     W, n_loc, ax = ctx.num_workers, ctx.n_loc, ctx.axis
-    m = dst.shape[0]
     c = capacity
-    key = jnp.where(valid, dst.astype(jnp.int32), BIG)
-    order = jnp.argsort(key)
-    sdst = key[order]
-    svalid = sdst != BIG
-    bounds = jnp.searchsorted(
-        sdst, jnp.arange(W + 1, dtype=jnp.int32) * n_loc, side="left"
-    ).astype(jnp.int32)
-    owner = jnp.clip(sdst // n_loc, 0, W - 1)
-    pos = jnp.arange(m, dtype=jnp.int32)
-    slot_in = pos - bounds[owner]
-    fits = slot_in < c
-    overflow = jnp.any(svalid & ~fits)
-    slot = jnp.where(svalid & fits, owner * c + slot_in, W * c)
+    ids = jnp.where(valid, dst.astype(jnp.int32), BIG)
+    owner = jnp.clip(ids // n_loc, 0, W - 1)
+    key = jnp.where(valid, owner, W).astype(jnp.int32)
 
-    send_ids = _pack(sdst, slot, W * c, BIG).reshape(W, c)
+    if resolve_impl(impl) == "bucket":
+        rank, count = kops.bucket_ranks(key, W, use_kernel=use_kernel)
+    else:
+        rank, count = _slots_sort(key, W)
+
+    fits = rank < c
+    overflow = jnp.any(valid & ~fits)
+    slot = jnp.where(valid & fits, key * c + rank, W * c)
+    # wire accounting: only packed messages cross the wire
+    sent_count = jnp.minimum(count, c)
+
+    def pack(leaf, fill):
+        shape = (W * c + 1,) + leaf.shape[1:]
+        buf = jnp.full(shape, fill, leaf.dtype)
+        return buf.at[slot].set(leaf, mode="drop")[: W * c]
+
+    send_ids = pack(ids, BIG).reshape(W, c)
     recv_ids = jax.lax.all_to_all(send_ids, ax, 0, 0, tiled=True)
     recv_mask = recv_ids != BIG
 
-    sorted_payload = jax.tree_util.tree_map(lambda x: x[order], payload)
     if exchange_payload:
         def xch(leaf):
-            packed = _pack(leaf, slot, W * c, 0).reshape((W, c) + leaf.shape[1:])
+            packed = pack(leaf, 0).reshape((W, c) + leaf.shape[1:])
             return jax.lax.all_to_all(packed, ax, 0, 0, tiled=True)
-        recv_payload = jax.tree_util.tree_map(xch, sorted_payload)
+        recv_payload = jax.tree_util.tree_map(xch, payload)
     else:
         recv_payload = None
 
-    sent_count = bounds[1:] - bounds[:-1]
     return Routed(
         ids=recv_ids,
         mask=recv_mask,
         payload=recv_payload,
-        order=order,
         slot=slot,
         sent_count=sent_count,
         overflow=overflow,
     )
 
 
-def reply(ctx, routed: Routed, resp, m: int):
-    """Send per-slot responses back (positionally — no ids on the wire) and
-    un-permute to the original message order.
+def reply(ctx, routed: Routed, resp):
+    """Send per-slot responses back (positionally — no ids on the wire)
+    and deliver them in the original message order.
 
     Args:
       routed: the Routed from the request phase.
       resp: pytree of (W, C, ...) responses aligned with routed.ids.
-      m: number of original messages.
     Returns:
-      pytree of (M, ...) responses in original message order.
+      pytree of (M, ...) responses in original message order (zeros for
+      messages that were never packed).
     """
     ax = ctx.axis
 
@@ -115,14 +195,51 @@ def reply(ctx, routed: Routed, resp, m: int):
         back = jax.lax.all_to_all(leaf, ax, 0, 0, tiled=True)  # (W, C, ...)
         flat = back.reshape((-1,) + leaf.shape[2:])
         flat = jnp.concatenate([flat, jnp.zeros_like(flat[:1])], axis=0)
-        per_sorted = flat[jnp.minimum(routed.slot, flat.shape[0] - 1)]
-        out = jnp.zeros((m,) + per_sorted.shape[1:], per_sorted.dtype)
-        return out.at[routed.order].set(per_sorted, mode="drop")
+        # routed.slot is per original message: dropped slots hit the pad row
+        return flat[jnp.minimum(routed.slot, flat.shape[0] - 1)]
 
     return jax.tree_util.tree_map(xch_back, resp)
 
 
 def remote_count(ctx, sent_count):
-    """Messages that actually cross a worker boundary (exclude self)."""
+    """Wire messages that actually cross a worker boundary (exclude self)."""
     me = ctx.me()
     return (sent_count.sum() - sent_count[me]).astype(TRAFFIC_DTYPE)
+
+
+def dedup_dense(dst, valid, n_total: int, m_cap: Optional[int] = None):
+    """Sort-free per-worker dedup: the compact ascending list of unique
+    valid destinations, via a dense occupancy histogram + prefix-sum
+    compaction (O(M + N) with an int32 N-sized transient — the counting
+    idea of the bucket route applied to the id space; callers reduce
+    values in the *compact* space, never densely).
+
+    Regime note: the O(N) term is over the *global* id space, so it does
+    not shrink as workers are added, while M = E/W does. Counting dedup
+    wins whenever N is within a small factor of M (graphs with average
+    degree >= ~2, the regime of this library and its benchmarks); for
+    W*N >> E a sorted dedup would be the better trade — a future lever,
+    switchable on the static (m, n_total) shapes at trace time.
+
+    Args:
+      dst: (M,) int32 global destination ids.
+      valid: (M,) bool.
+      n_total: static id-space bound (W * n_loc).
+      m_cap: compact-list capacity (default M; the unique count never
+        exceeds the valid count, so M is always safe).
+    Returns:
+      (u_dst, pos): ``u_dst`` (m_cap,) the unique destinations in
+      ascending order, padded with BIG; ``pos`` (N,) the compact index of
+      each destination id (arbitrary where the id never occurs).
+    """
+    m = dst.shape[0]
+    m_cap = m if m_cap is None else m_cap
+    key = jnp.where(valid, dst.astype(jnp.int32), n_total)
+    got = jnp.zeros((n_total,), jnp.int32).at[key].add(1, mode="drop") > 0
+    pos = jnp.cumsum(got.astype(jnp.int32)) - 1  # compact index per id
+    u_dst = (
+        jnp.full((m_cap + 1,), BIG, jnp.int32)
+        .at[jnp.where(got, pos, m_cap)]
+        .set(jnp.arange(n_total, dtype=jnp.int32), mode="drop")[:m_cap]
+    )
+    return u_dst, pos

@@ -57,10 +57,20 @@ def plan_broadcast_combine(
     if edge_transform is not None:
         per_edge = edge_transform(per_edge, plan.edge_w)
 
-    # 2. sender-side combine: one value per unique destination (sorted ids)
+    # 2. sender-side combine: one value per unique destination (sorted
+    # ids). The kernel path rides the plan's autotuned block sizes and
+    # precomputed chunk tables (graph/pgraph.py) instead of deriving a
+    # worst-case grid on device.
+    kernel_kw = {}
+    if plan.chunk_start is not None:
+        kernel_kw = dict(
+            block_rows=plan.block_rows,
+            block_edges=plan.block_edges,
+            chunk_plan=(plan.chunk_start, plan.chunk_count, plan.max_chunks),
+        )
     u_vals = kops.segment_combine(
         per_edge, plan.edge_seg, plan.u_cap, combiner,
-        use_kernel=use_kernel, assume_sorted=True,
+        use_kernel=use_kernel, assume_sorted=True, **kernel_kw,
     )
 
     # 3. positional pack (payload only — the routing is static)

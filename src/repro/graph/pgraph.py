@@ -24,6 +24,15 @@ def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
+def _bucket_cap(x: int, align: int) -> int:
+    """Slot caps are bucketed to the next power of two (floored at
+    ``align``): every static cap enters the compiled loop's shape
+    signature, so same-topology graphs whose raw per-worker counts differ
+    slightly land on identical caps and share one Engine compile."""
+    x = max(x, 1)
+    return max(align, 1 << (x - 1).bit_length())
+
+
 class HostArray:
     """Host-side numpy array kept OUT of the jax pytree (static aux data
     with identity hashing — it never changes after construction)."""
@@ -54,6 +63,11 @@ class ScatterPlan:
     pack_slot: jax.Array     # (W, U_cap) i32 slot in (W*C) send buf (pad W*C)
     recv_local: jax.Array    # (W, W, C) i32 local dst idx (pad n_loc)
     send_count: jax.Array    # (W, W) i32 real entries per peer
+    # autotuned segment-combine kernel plan (host-built from the edge
+    # distribution; the statics ride the treedef, so the block choice is
+    # part of every compile-cache key that includes this plan)
+    chunk_start: Optional[jax.Array]  # (W, NB) i32 first covering chunk
+    chunk_count: Optional[jax.Array]  # (W, NB) i32 covering chunks per block
     # static metadata
     n_loc: int = dataclasses.field(metadata=dict(static=True))
     num_workers: int = dataclasses.field(metadata=dict(static=True))
@@ -62,6 +76,9 @@ class ScatterPlan:
     slot_cap: int = dataclasses.field(metadata=dict(static=True))
     remote_entries: int = dataclasses.field(metadata=dict(static=True))
     total_edges: int = dataclasses.field(metadata=dict(static=True))
+    block_rows: int = dataclasses.field(default=0, metadata=dict(static=True))
+    block_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
+    max_chunks: int = dataclasses.field(default=0, metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -162,9 +179,9 @@ def _build_scatter_plan(
         u_caps.append(len(u))
         c_caps.append(cnt.max(initial=0))
 
-    e_cap = _round_up(max(max(e_caps), 1), align)
-    u_cap = _round_up(max(max(u_caps), 1), align)
-    c = _round_up(max(max(c_caps), 1), align)
+    e_cap = _bucket_cap(max(e_caps), align)
+    u_cap = _bucket_cap(max(u_caps), align)
+    c = _bucket_cap(int(max(c_caps)), align)
 
     edge_src = np.zeros((W, e_cap), np.int32)
     edge_seg = np.full((W, e_cap), u_cap, np.int32)
@@ -194,6 +211,27 @@ def _build_scatter_plan(
             mine = u[owners_u == p]
             recv_local[p, w, : len(mine)] = (mine - p * n_loc).astype(np.int32)
 
+    # autotuned segment-combine block plan: block sizes chosen from the
+    # edge distribution, per-worker chunk tables built against the
+    # kernel's padded view (repro.kernels.ops.plan_chunks). Imported
+    # lazily: the kernels package pulls in repro.core, which imports the
+    # channel modules that import this one.
+    from repro.kernels import ops as kops
+
+    block_rows, block_edges = kops.autotune_block_sizes(u_cap, e_cap)
+    chunk_start, chunk_count, max_chunks = [], [], 0
+    for w in range(W):
+        cs, nc, mx = kops.plan_chunks(
+            edge_seg[w], u_cap, block_rows, block_edges
+        )
+        chunk_start.append(cs)
+        chunk_count.append(nc)
+        max_chunks = max(max_chunks, mx)
+    # max_chunks is a static grid bound derived from the edge *skew*, not
+    # the caps — bucket it to the next power of two so same-cap graphs
+    # with slightly different skew still share a compile signature
+    max_chunks = _bucket_cap(max_chunks, 1)
+
     return ScatterPlan(
         edge_src=jnp.asarray(edge_src),
         edge_seg=jnp.asarray(edge_seg),
@@ -201,6 +239,8 @@ def _build_scatter_plan(
         pack_slot=jnp.asarray(pack_slot),
         recv_local=jnp.asarray(recv_local),
         send_count=jnp.asarray(send_count),
+        chunk_start=jnp.asarray(np.stack(chunk_start)),
+        chunk_count=jnp.asarray(np.stack(chunk_count)),
         n_loc=n_loc,
         num_workers=W,
         e_cap=e_cap,
@@ -208,6 +248,9 @@ def _build_scatter_plan(
         slot_cap=c,
         remote_entries=remote,
         total_edges=total,
+        block_rows=block_rows,
+        block_edges=block_edges,
+        max_chunks=max_chunks,
     )
 
 
@@ -231,7 +274,7 @@ def _build_prop_plan(
         order = np.lexsort((s, d))
         per_worker.append((s[order], d[order], wt[order] if wt is not None else None))
         ei = max(ei, len(s))
-    ei_cap = _round_up(max(ei, 1), align)
+    ei_cap = _bucket_cap(ei, align)
     int_src = np.zeros((W, ei_cap), np.int32)
     int_dst = np.full((W, ei_cap), n_loc, np.int32)
     int_w = np.zeros((W, ei_cap), np.float32) if weights is not None else None
@@ -260,7 +303,7 @@ def _build_raw_edges(src_new, dst_new, weights, n_workers, n_loc, align=8) -> Ra
     W = n_workers
     owner = src_new // n_loc
     counts = [int((owner == w).sum()) for w in range(W)]
-    e_cap = _round_up(max(max(counts, default=0), 1), align)
+    e_cap = _bucket_cap(max(counts, default=0), align)
     src_l = np.zeros((W, e_cap), np.int32)
     dst_g = np.zeros((W, e_cap), np.int32)
     ws = np.zeros((W, e_cap), np.float32) if weights is not None else None

@@ -1,31 +1,105 @@
-"""Jit-ready wrappers around the Pallas kernels, with plan building.
+"""Jit-ready wrappers around the Pallas kernels, plan building, and the
+kernel-path configuration surface.
 
 ``segment_combine`` is the public entry point used by the channels: it
-dispatches to the Pallas kernel (TPU target; interpret=True on CPU) or to
-the pure-jnp reference depending on ``use_kernel``. The kernel path expects
-sorted segment ids (the scatter-combine channel guarantees this by
-construction — that is the paper's preprocessing insight).
+dispatches to the Pallas kernel or to the pure-jnp reference depending on
+``use_kernel``. The kernel path expects sorted segment ids (the
+scatter-combine channel guarantees this by construction — that is the
+paper's preprocessing insight). ``bucket_ranks`` is the analogous entry
+point for the routing data plane (stable counting-sort ranks).
+
+Configuration — resolved by :func:`resolve_use_kernel`, most specific
+wins:
+
+  1. an explicit ``use_kernel=`` argument at a call site;
+  2. the :func:`use_kernel_scope` context (how ``Engine(use_kernel=...)``
+     threads the knob through a compile);
+  3. the ``REPRO_USE_KERNEL`` environment variable (``1/true/yes/on``);
+  4. the backend default: **on** for TPU (the kernels are the fast path
+     there), off elsewhere (the interpret-mode kernel is a correctness
+     vehicle on CPU, not a fast path).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
+import contextlib
+import os
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import combiners as cb
+from repro.kernels import bucket_route as kbucket
 from repro.kernels import ref as kref
 from repro.kernels import segment_combine as kseg
 
-# Flipped by tests / benchmarks; CPU default is the reference path (the
-# interpret-mode kernel is a correctness vehicle, not a CPU fast path).
-_USE_KERNEL_DEFAULT = False
+_TRUTHY = ("1", "true", "yes", "on")
+
+# Scope override (None = fall through to env/backend). Set via
+# use_kernel_scope — e.g. around an Engine compile.
+_KERNEL_OVERRIDE: Optional[bool] = None
+
+
+def resolve_use_kernel(use_kernel: Optional[bool] = None) -> bool:
+    """The kernel-vs-reference decision for a call site (see module doc)."""
+    if use_kernel is not None:
+        return bool(use_kernel)
+    if _KERNEL_OVERRIDE is not None:
+        return _KERNEL_OVERRIDE
+    env = os.environ.get("REPRO_USE_KERNEL")
+    if env is not None:
+        return env.strip().lower() in _TRUTHY
+    return jax.default_backend() == "tpu"
+
+
+@contextlib.contextmanager
+def use_kernel_scope(use_kernel: Optional[bool]):
+    """Pin the kernel decision for every channel call under the scope
+    (trace-time: wrap the compile, not the execution)."""
+    global _KERNEL_OVERRIDE
+    prev = _KERNEL_OVERRIDE
+    _KERNEL_OVERRIDE = None if use_kernel is None else bool(use_kernel)
+    try:
+        yield
+    finally:
+        _KERNEL_OVERRIDE = prev
+
+
+def resolve_interpret(interpret: Optional[bool] = None) -> bool:
+    """Pallas interpret mode: real lowering on TPU, interpreter elsewhere."""
+    if interpret is not None:
+        return bool(interpret)
+    return jax.default_backend() != "tpu"
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def _next_pow2(x: int) -> int:
+    return 1 if x <= 1 else 1 << (x - 1).bit_length()
+
+
+# ---------------------------------------------------------------------------
+# block-plan autotune (host-side, consumed by graph.pgraph.ScatterPlan)
+# ---------------------------------------------------------------------------
+
+
+def autotune_block_sizes(u_cap: int, e_cap: int) -> Tuple[int, int]:
+    """Choose (block_rows, block_edges) for a sorted-segment combine from
+    the edge distribution of a plan.
+
+    Heuristic: size the output tile to the segment count (small graphs
+    should not pad 8x past their rows), then size the edge chunk so one
+    chunk covers roughly the edges of one row block (``avg_deg *
+    block_rows``) — each row block then visits O(1) chunks, which is what
+    keeps the revisited-output reduction grid shallow.
+    """
+    block_rows = min(128, max(8, _next_pow2(u_cap)))
+    avg_deg = e_cap / max(u_cap, 1)
+    block_edges = min(2048, max(128, _next_pow2(int(avg_deg * block_rows))))
+    return block_rows, block_edges
 
 
 def build_chunk_plan(seg_ids_np, num_segments, block_rows, block_edges):
@@ -43,6 +117,25 @@ def build_chunk_plan(seg_ids_np, num_segments, block_rows, block_edges):
     return cs.astype(np.int32), nc, int(nc.max(initial=0))
 
 
+def plan_chunks(seg_ids_np, num_segments, block_rows, block_edges):
+    """build_chunk_plan against the *kernel's* padded view of the inputs:
+    entries >= num_segments map to the padded row bound and the edge axis
+    is padded to a block_edges multiple — exactly what
+    :func:`segment_combine` does internally, so a plan built here can be
+    passed as its ``chunk_plan`` (the ScatterPlan autotune path)."""
+    seg = np.asarray(seg_ids_np)
+    n_pad = _round_up(max(num_segments, 1), block_rows)
+    e_pad = _round_up(max(len(seg), 1), block_edges)
+    seg = np.where((seg < 0) | (seg >= num_segments), n_pad, seg)
+    seg = np.concatenate([seg, np.full(e_pad - len(seg), n_pad, seg.dtype)])
+    return build_chunk_plan(seg, num_segments, block_rows, block_edges)
+
+
+# ---------------------------------------------------------------------------
+# segment combine (scatter-combine hot loop)
+# ---------------------------------------------------------------------------
+
+
 def segment_combine(
     vals,
     seg_ids,
@@ -50,7 +143,7 @@ def segment_combine(
     combiner,
     *,
     use_kernel: Optional[bool] = None,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
     block_rows: int = 128,
     block_edges: int = 512,
     chunk_plan=None,
@@ -62,8 +155,7 @@ def segment_combine(
     requires sorted seg_ids (assume_sorted or it sorts internally).
     """
     combiner = cb.get(combiner)
-    use_kernel = _USE_KERNEL_DEFAULT if use_kernel is None else use_kernel
-    if not use_kernel:
+    if not resolve_use_kernel(use_kernel):
         return kref.segment_combine_ref(vals, seg_ids, num_segments, combiner)
 
     vals = jnp.asarray(vals)
@@ -115,7 +207,7 @@ def segment_combine(
         block_rows=block_rows,
         block_edges=block_edges,
         max_chunks=max_chunks,
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )[:num_segments]
     return out[:, 0] if squeeze else out
 
@@ -127,3 +219,45 @@ def gather_segment_combine(
     (it fuses with the kernel's input stream); the reduce uses the kernel."""
     vals = jnp.asarray(src_vals)[jnp.asarray(edge_src, jnp.int32)]
     return segment_combine(vals, seg_ids, num_segments, combiner, **kw)
+
+
+# ---------------------------------------------------------------------------
+# bucket ranks (routing data plane)
+# ---------------------------------------------------------------------------
+
+
+def bucket_ranks(
+    keys,
+    num_buckets: int,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    block_msgs: int = 512,
+):
+    """Stable arrival rank of each message within its bucket, plus the
+    per-bucket occupancy — the permutation core of the one-pass routed
+    exchange (see ``repro.core.routing``).
+
+    Args:
+      keys: (M,) int32 bucket per message in ``[0, num_buckets]`` where
+        ``num_buckets`` is the invalid sentinel.
+      num_buckets: static bucket count (the worker count W).
+    Returns:
+      (rank (M,) int32, counts (num_buckets,) int32).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    if not resolve_use_kernel(use_kernel):
+        return kref.bucket_ranks_ref(keys, num_buckets)
+    m = keys.shape[0]
+    m_pad = _round_up(max(m, 1), block_msgs)
+    if m_pad != m:
+        keys = jnp.concatenate(
+            [keys, jnp.full((m_pad - m,), num_buckets, jnp.int32)]
+        )
+    rank, counts = kbucket.bucket_ranks_pallas(
+        keys,
+        num_buckets=num_buckets,
+        block_msgs=block_msgs,
+        interpret=resolve_interpret(interpret),
+    )
+    return rank[:m], counts[:num_buckets]

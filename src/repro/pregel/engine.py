@@ -28,7 +28,9 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 
+from repro.core import routing
 from repro.graph.pgraph import PartitionedGraph
+from repro.kernels import ops as kops
 from repro.pregel import runtime
 from repro.pregel.program import VertexProgram
 
@@ -43,7 +45,9 @@ class Engine:
 
     def __init__(self, backend: str = "vmap",
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 mode: Optional[str] = None, chunk_size: int = 64):
+                 mode: Optional[str] = None, chunk_size: int = 64,
+                 use_kernel: Optional[bool] = None,
+                 route_impl: Optional[str] = None):
         if mode is None:
             mode = "fused"
         if mode not in ("fused", "chunked", "host"):
@@ -52,6 +56,12 @@ class Engine:
         self.mesh = mesh
         self.mode = mode
         self.chunk_size = chunk_size
+        # data-plane knobs, resolved once per engine (None = env/backend
+        # default — see repro.kernels.ops / repro.core.routing) and part
+        # of every cache key: a kernel-path loop and a reference-path
+        # loop are different executables.
+        self.use_kernel = kops.resolve_use_kernel(use_kernel)
+        self.route_impl = routing.resolve_impl(route_impl)
         self._cache: Dict[Tuple, runtime.CompiledSupersteps] = {}
         self.compiles = 0
         self.cache_hits = 0
@@ -81,8 +91,8 @@ class Engine:
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
         state0 = prog.init(pg)
-        key = (prog, ms, co, runtime.graph_signature(pg),
-               runtime.state_signature(state0))
+        key = (prog, ms, co, self.use_kernel, self.route_impl,
+               runtime.graph_signature(pg), runtime.state_signature(state0))
         exe = self._cache.get(key)
         hit = exe is not None
         if not hit:
@@ -92,6 +102,7 @@ class Engine:
                 pg, prog.step, state0, max_steps=ms, backend=self.backend,
                 mesh=self.mesh, check_overflow=co, mode=self.mode,
                 chunk_size=self.chunk_size, channels=prog.channels,
+                use_kernel=self.use_kernel, route_impl=self.route_impl,
             )
             self._cache[key] = exe
             self.compiles += 1
@@ -119,10 +130,13 @@ class Engine:
 def run_program(prog: VertexProgram, pg: PartitionedGraph, *,
                 backend: str = "vmap", mesh=None, mode: Optional[str] = None,
                 chunk_size: int = 64, max_steps: Optional[int] = None,
-                check_overflow: Optional[bool] = None) -> runtime.RunResult:
+                check_overflow: Optional[bool] = None,
+                use_kernel: Optional[bool] = None,
+                route_impl: Optional[str] = None) -> runtime.RunResult:
     """One-shot convenience: a throwaway single-run Engine. The legacy
     per-algorithm ``run()`` wrappers delegate here."""
     eng = Engine(backend=backend, mesh=mesh, mode=mode,
-                 chunk_size=chunk_size)
+                 chunk_size=chunk_size, use_kernel=use_kernel,
+                 route_impl=route_impl)
     return eng.run(prog, pg, max_steps=max_steps,
                    check_overflow=check_overflow)

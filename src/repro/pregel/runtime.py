@@ -53,8 +53,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregator
+from repro.core import routing
 from repro.core.channel import ChannelContext, ChannelRegistry, key_under
 from repro.graph.pgraph import PartitionedGraph
+from repro.kernels import ops as kops
 
 AXIS = "workers"
 
@@ -86,6 +88,11 @@ class RunResult:
     cache_hit: bool = False
     engine_compiles: int = 0
     engine_cache_hits: int = 0
+    # Data-plane configuration the loop was compiled with (resolved —
+    # benchmarks report exactly which path ran): Pallas kernels vs the
+    # jnp reference, and the routed-exchange implementation.
+    use_kernel: bool = False
+    route_impl: str = ""
 
     @property
     def total_bytes(self) -> int:
@@ -130,11 +137,29 @@ def _host_int(v) -> int:
 
 
 def scrub_graph(graph: PartitionedGraph) -> PartitionedGraph:
-    """Drop the host-only static fields (``name``, ``new_of_old``) that
-    carry per-graph identity but never enter traced code. Two graphs with
+    """Drop the host-only static fields that carry per-graph identity but
+    never enter traced code: the graph ``name``/``new_of_old`` and the
+    plans' exact-count reporting statics (``total_edges`` /
+    ``remote_entries`` — two graphs whose counts differ inside one
+    power-of-two cap bucket must still share a treedef). Two graphs with
     identical shapes/caps scrub to identical pytree treedefs, which is
     what lets one compiled executable serve both."""
-    return dataclasses.replace(graph, name="", new_of_old=None)
+
+    def scatter(plan):
+        return plan if plan is None else dataclasses.replace(
+            plan, remote_entries=0, total_edges=0)
+
+    def prop(plan):
+        return plan if plan is None else dataclasses.replace(
+            plan, cut=scatter(plan.cut))
+
+    return dataclasses.replace(
+        graph, name="", new_of_old=None,
+        scatter_out=scatter(graph.scatter_out),
+        scatter_in=scatter(graph.scatter_in),
+        prop_out=prop(graph.prop_out),
+        prop_in=prop(graph.prop_in),
+    )
 
 
 def graph_signature(graph: PartitionedGraph):
@@ -173,6 +198,9 @@ class CompiledSupersteps:
     registry: Optional[ChannelRegistry]
     compile_time_s: float
     _fn: Callable
+    # resolved data-plane configuration baked into the compiled loop
+    use_kernel: bool = False
+    route_impl: str = "bucket"
 
     def execute(self, graph: PartitionedGraph, state0: Any) -> RunResult:
         """One run. ``compile_time_s`` on the result is 0 — the caller
@@ -181,12 +209,16 @@ class CompiledSupersteps:
         # same-signature graph replays (name/new_of_old identity dropped)
         graph = scrub_graph(graph)
         if self.mode == "host":
-            return _exec_host(self._fn, graph, state0, self.max_steps,
-                              self.check_overflow)
-        if self.mode == "fused":
-            return _exec_fused(self._fn, graph, state0, self.check_overflow)
-        return _exec_chunked(self._fn, graph, state0, self.max_steps,
+            res = _exec_host(self._fn, graph, state0, self.max_steps,
                              self.check_overflow)
+        elif self.mode == "fused":
+            res = _exec_fused(self._fn, graph, state0, self.check_overflow)
+        else:
+            res = _exec_chunked(self._fn, graph, state0, self.max_steps,
+                                self.check_overflow)
+        res.use_kernel = self.use_kernel
+        res.route_impl = self.route_impl
+        return res
 
 
 def compile_supersteps(
@@ -201,9 +233,16 @@ def compile_supersteps(
     mode: Optional[str] = None,
     chunk_size: int = 64,
     channels: Optional[Any] = None,
+    use_kernel: Optional[bool] = None,
+    route_impl: Optional[str] = None,
 ) -> CompiledSupersteps:
     """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
     shape, without running it. See :func:`run_supersteps` for semantics.
+
+    use_kernel / route_impl pin the data-plane configuration for the
+    whole compile (None = resolve from env/backend defaults, see
+    ``repro.kernels.ops`` / ``repro.core.routing``); explicit per-call
+    channel arguments inside the step still win.
     """
     # lower against the scrubbed graph: the compiled treedef must not
     # capture the host-only identity statics, or execute() could only
@@ -256,44 +295,50 @@ def compile_supersteps(
     # so discover it with a one-time jax.eval_shape dry trace (no compute).
     # Host mode consumes open per-step dicts and needs no registry. ------
     registry = None
-    if channels is not None:
-        from repro.core import compose
+    resolved_kernel = kops.resolve_use_kernel(use_kernel)
+    resolved_route = routing.resolve_impl(route_impl)
+    # the data-plane choice is baked in at trace time: every channel call
+    # that did not pass an explicit argument resolves through these scopes
+    with kops.use_kernel_scope(resolved_kernel), \
+            routing.impl_scope(resolved_route):
+        if channels is not None:
+            from repro.core import compose
 
-        names = compose.channel_names_of(channels)
-        # the mapped step's per-step stat leaf is (W,) under vmap (one
-        # scalar per logical worker) and () under shard_map (replicated)
-        stat_shape = (W,) if backend == "vmap" else ()
-        registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
-    elif mode in ("fused", "chunked"):
-        probe = map_shards(make_shard_step(None))
-        out_struct = jax.eval_shape(
-            probe, graph, state0, jnp.asarray(0, jnp.int32)
-        )
-        _, _, _, bytes_struct, _ = out_struct
-        registry = ChannelRegistry.from_stats_structure(bytes_struct)
+            names = compose.channel_names_of(channels)
+            # the mapped step's per-step stat leaf is (W,) under vmap (one
+            # scalar per logical worker) and () under shard_map (replicated)
+            stat_shape = (W,) if backend == "vmap" else ()
+            registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
+        elif mode in ("fused", "chunked"):
+            probe = map_shards(make_shard_step(None))
+            out_struct = jax.eval_shape(
+                probe, graph, state0, jnp.asarray(0, jnp.int32)
+            )
+            _, _, _, bytes_struct, _ = out_struct
+            registry = ChannelRegistry.from_stats_structure(bytes_struct)
 
-    mapped = map_shards(make_shard_step(registry))
-    i0 = jnp.asarray(0, jnp.int32)
+        mapped = map_shards(make_shard_step(registry))
+        i0 = jnp.asarray(0, jnp.int32)
 
-    tc = time.perf_counter()
-    if mode == "host":
-        fn = jax.jit(mapped).lower(graph, state0, i0).compile()
-    elif mode == "fused":
-        fn = (
-            jax.jit(_make_fused_loop(mapped, registry, max_steps,
-                                     check_overflow))
-            .lower(graph, state0)
-            .compile()
-        )
-    else:
-        f = jnp.zeros((), bool)
-        fn = (
-            jax.jit(_make_chunk(mapped, registry, max_steps, check_overflow,
-                                chunk_size))
-            .lower(graph, state0, i0, f, f)
-            .compile()
-        )
-    compile_s = time.perf_counter() - tc
+        tc = time.perf_counter()
+        if mode == "host":
+            fn = jax.jit(mapped).lower(graph, state0, i0).compile()
+        elif mode == "fused":
+            fn = (
+                jax.jit(_make_fused_loop(mapped, registry, max_steps,
+                                         check_overflow))
+                .lower(graph, state0)
+                .compile()
+            )
+        else:
+            f = jnp.zeros((), bool)
+            fn = (
+                jax.jit(_make_chunk(mapped, registry, max_steps,
+                                    check_overflow, chunk_size))
+                .lower(graph, state0, i0, f, f)
+                .compile()
+            )
+        compile_s = time.perf_counter() - tc
 
     # both validation directions without a dry trace: an undeclared
     # traced channel raised from add_traffic during the AOT trace above;
@@ -317,6 +362,8 @@ def compile_supersteps(
         registry=registry,
         compile_time_s=compile_s,
         _fn=fn,
+        use_kernel=resolved_kernel,
+        route_impl=resolved_route,
     )
 
 
@@ -332,6 +379,8 @@ def run_supersteps(
     mode: Optional[str] = None,
     chunk_size: int = 64,
     channels: Optional[Any] = None,
+    use_kernel: Optional[bool] = None,
+    route_impl: Optional[str] = None,
 ) -> RunResult:
     """Run `step_fn(ctx, graph_shard, state_shard, step)` to halt.
 
@@ -354,7 +403,8 @@ def run_supersteps(
     exe = compile_supersteps(
         graph, step_fn, state0, max_steps=max_steps, backend=backend,
         mesh=mesh, axis=axis, check_overflow=check_overflow, mode=mode,
-        chunk_size=chunk_size, channels=channels,
+        chunk_size=chunk_size, channels=channels, use_kernel=use_kernel,
+        route_impl=route_impl,
     )
     res = exe.execute(graph, state0)
     res.compile_time_s = exe.compile_time_s

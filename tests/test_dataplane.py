@@ -1,0 +1,399 @@
+"""The kernelized sparse data plane: one-pass bucket routing vs the
+sort-route baseline (bit-identical ``Routed`` contract), the Pallas
+bucket-rank kernel vs its jnp oracle, wire-message traffic accounting
+(post-dedup, capacity-clamped), the density-adaptive exchange, and the
+``use_kernel``/``route_impl`` configuration surface end to end
+(env var -> Engine knob -> RunResult)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import compose
+from repro.core import message as msg
+from repro.core import routing
+from repro.core.channel import ChannelContext
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+W, N_LOC = 4, 16
+AXIS = "w"
+MODES = ("host", "fused", "chunked")
+
+
+def make_ctx():
+    return ChannelContext(AXIS, W, N_LOC)
+
+
+def run_sharded(fn, *args):
+    return jax.vmap(fn, axis_name=AXIS)(*args)
+
+
+def _route_fields(impl, dst, valid, payload, capacity):
+    def shard(d, v, p):
+        routed = routing.route(make_ctx(), d, v, p, capacity, impl=impl)
+        return (routed.ids, routed.mask, routed.payload, routed.slot,
+                routed.sent_count, routed.overflow)
+
+    return run_sharded(shard, dst, valid, payload)
+
+
+def _assert_bit_identical(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# bucket-route vs sort-route parity
+# ---------------------------------------------------------------------------
+
+
+def _random_messages(seed, m, valid_frac=0.7):
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.integers(0, W * N_LOC, (W, m)).astype(np.int32))
+    valid = jnp.asarray(rng.random((W, m)) < valid_frac)
+    payload = {
+        "f": jnp.asarray(rng.normal(size=(W, m)).astype(np.float32)),
+        "i2": jnp.asarray(rng.integers(0, 99, (W, m, 2)).astype(np.int32)),
+    }
+    return dst, valid, payload
+
+
+@pytest.mark.parametrize("seed,m,cap", [(0, 40, 40), (1, 64, 64), (2, 7, 7)])
+def test_bucket_matches_sort_bit_identical(seed, m, cap):
+    dst, valid, payload = _random_messages(seed, m)
+    _assert_bit_identical(
+        _route_fields("bucket", dst, valid, payload, cap),
+        _route_fields("sort", dst, valid, payload, cap),
+    )
+
+
+def test_bucket_matches_sort_edge_cases():
+    m = 16
+    zero_pay = {"x": jnp.zeros((W, m), jnp.float32)}
+    # empty: no valid message anywhere
+    dst = jnp.zeros((W, m), jnp.int32)
+    none = jnp.zeros((W, m), bool)
+    a = _route_fields("bucket", dst, none, zero_pay, m)
+    b = _route_fields("sort", dst, none, zero_pay, m)
+    _assert_bit_identical(a, b)
+    assert not np.asarray(a[5]).any()          # no overflow
+    assert int(np.asarray(a[4]).sum()) == 0    # no wire messages
+    # all messages to one owner (vertex 0's worker), full valid
+    all_valid = jnp.ones((W, m), bool)
+    _assert_bit_identical(
+        _route_fields("bucket", dst, all_valid, zero_pay, m),
+        _route_fields("sort", dst, all_valid, zero_pay, m),
+    )
+
+
+def test_overflow_latch_equivalence_and_wire_clamp():
+    """Capacity overflow: both impls latch the flag, and both charge only
+    the messages that fit on the wire (capacity-clamped sent_count) —
+    never the enqueued overflow."""
+    m, cap = 16, 3
+    dst = jnp.zeros((W, m), jnp.int32)  # everyone floods vertex 0
+    valid = jnp.ones((W, m), bool)
+    for impl in ("bucket", "sort"):
+        ids, mask, _, slot, sent, ovf = _route_fields(
+            impl, dst, valid, {}, cap)
+        assert np.asarray(ovf).all(), impl
+        np.testing.assert_array_equal(
+            np.asarray(sent), np.tile(np.eye(W, dtype=np.int32)[0] * cap, (W, 1))
+        )
+        # exactly cap messages packed per worker, the rest dropped
+        assert int((np.asarray(slot) < W * cap).sum()) == W * cap
+
+
+def test_route_impl_env_and_scope(monkeypatch):
+    monkeypatch.delenv("REPRO_ROUTE_IMPL", raising=False)
+    assert routing.resolve_impl() == "bucket"
+    monkeypatch.setenv("REPRO_ROUTE_IMPL", "sort")
+    assert routing.resolve_impl() == "sort"
+    with routing.impl_scope("bucket"):
+        assert routing.resolve_impl() == "bucket"  # scope beats env
+    assert routing.resolve_impl() == "sort"
+    with pytest.raises(ValueError, match="unknown routing impl"):
+        routing.resolve_impl("warp")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (optional-import, PR 1 convention)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev env without hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        m=st.integers(1, 60),
+        cap_frac=st.floats(0.1, 1.0),
+        valid_frac=st.floats(0.0, 1.0),
+    )
+    def test_route_parity_property(seed, m, cap_frac, valid_frac):
+        """Random messages, random capacity (including overflowing ones):
+        every Routed field is bit-identical across the two impls."""
+        dst, valid, payload = _random_messages(seed, m, valid_frac)
+        cap = max(1, int(m * cap_frac))
+        _assert_bit_identical(
+            _route_fields("bucket", dst, valid, payload, cap),
+            _route_fields("sort", dst, valid, payload, cap),
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 400),
+           b=st.integers(1, 16))
+    def test_bucket_ranks_kernel_property(seed, m, b):
+        rng = np.random.default_rng(seed)
+        keys = jnp.asarray(rng.integers(0, b + 1, m).astype(np.int32))
+        rk, ck = kops.bucket_ranks(keys, b, use_kernel=True, block_msgs=64)
+        rr, cr = kref.bucket_ranks_ref(keys, b)
+        np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+        np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+
+# ---------------------------------------------------------------------------
+# bucket-rank kernel vs oracle (fixed cases; property sweep above)
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_ranks_kernel_matches_ref():
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.integers(0, W + 1, 1000).astype(np.int32))
+    rk, ck = kops.bucket_ranks(keys, W, use_kernel=True, block_msgs=128)
+    rr, cr = kref.bucket_ranks_ref(keys, W)
+    np.testing.assert_array_equal(np.asarray(rk), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+
+def test_route_kernel_path_matches_reference():
+    """route(impl='bucket') with the Pallas kernel (interpret) ==
+    the jnp reference, under vmap like the real runtime."""
+    dst, valid, payload = _random_messages(7, 48)
+
+    def shard(use_kernel):
+        def fn(d, v, p):
+            routed = routing.route(make_ctx(), d, v, p, 48,
+                                   impl="bucket", use_kernel=use_kernel)
+            return (routed.ids, routed.mask, routed.payload, routed.slot,
+                    routed.sent_count, routed.overflow)
+        return run_sharded(fn, dst, valid, payload)
+
+    _assert_bit_identical(shard(True), shard(False))
+
+
+# ---------------------------------------------------------------------------
+# precomputed chunk plans (the ScatterPlan autotune path)
+# ---------------------------------------------------------------------------
+
+
+def test_plan_chunks_mirrors_kernel_padding():
+    """ops.plan_chunks builds host tables against the kernel's padded
+    view; if the two paddings ever desynchronize the kernel combines the
+    wrong chunks. Sweep block sizes that force max_chunks > 1."""
+    rng = np.random.default_rng(21)
+    n, e = 100, 1500
+    seg_np = np.sort(rng.integers(0, n, e)).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(e, 2)).astype(np.float32))
+    want = kref.segment_combine_ref(vals, jnp.asarray(seg_np), n, "sum")
+    for br, be in [(8, 64), (32, 128), (128, 512)]:
+        cs, nc, mx = kops.plan_chunks(seg_np, n, br, be)
+        assert mx >= 1
+        got = kops.segment_combine(
+            vals, jnp.asarray(seg_np), n, "sum", use_kernel=True,
+            assume_sorted=True, block_rows=br, block_edges=be,
+            chunk_plan=(jnp.asarray(cs), jnp.asarray(nc), mx))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_scatter_plan_chunk_tables_drive_the_kernel():
+    """The default-on-TPU path: segment_combine through a built
+    ScatterPlan's autotuned chunk tables == the reference, per worker."""
+    from repro.graph import generators as gen, pgraph
+
+    g = gen.rmat(8, edge_factor=8, seed=7).symmetrized()
+    pg = pgraph.partition_graph(g, W, "random", build=("scatter_out",))
+    plan = pg.scatter_out
+    rng = np.random.default_rng(8)
+    for w in range(W):
+        seg = plan.edge_seg[w]
+        vals = jnp.asarray(rng.normal(size=(plan.e_cap, 1)).astype(np.float32))
+        want = kref.segment_combine_ref(vals, seg, plan.u_cap, "min")
+        got = kops.segment_combine(
+            vals, seg, plan.u_cap, "min", use_kernel=True,
+            assume_sorted=True, block_rows=plan.block_rows,
+            block_edges=plan.block_edges,
+            chunk_plan=(plan.chunk_start[w], plan.chunk_count[w],
+                        plan.max_chunks))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# traffic accounting: id bytes per wire message, post-dedup
+# ---------------------------------------------------------------------------
+
+
+def test_combined_send_charges_post_dedup_wire_messages():
+    """Heavy duplication: the id bytes ride the deduped wire messages,
+    not the enqueued sends."""
+    rng = np.random.default_rng(11)
+    m = 64
+    dst = rng.integers(0, 8, (W, m)).astype(np.int32)  # few hot targets
+    valid = rng.random((W, m)) < 0.8
+    vals = rng.normal(size=(W, m)).astype(np.float32)
+
+    def shard(d, v, x):
+        ctx = make_ctx()
+        msg.combined_send(ctx, d, v, x, "sum", capacity=m)
+        return ctx.stats_msgs["combined_message"], ctx.stats_bytes["combined_message"]
+
+    nm, nb = run_sharded(shard, jnp.asarray(dst), jnp.asarray(valid),
+                         jnp.asarray(vals))
+    for w in range(W):
+        unique_remote = len({
+            int(dst[w, i]) for i in range(m) if valid[w, i]
+            and dst[w, i] // N_LOC != w
+        })
+        assert int(np.asarray(nm)[w]) == unique_remote
+        assert int(np.asarray(nb)[w]) == unique_remote * (4 + 4)
+
+
+@pytest.mark.slow
+def test_composed_bytes_under_sums_equal_total():
+    """Regression (accounting fix): per-component namespaced sums still
+    reconstruct the run total exactly, on both routing impls."""
+    from repro.algorithms import sv
+    from repro.graph import generators as gen, pgraph
+
+    g = gen.rmat(7, edge_factor=4, seed=3).symmetrized()
+    pg = pgraph.partition_graph(
+        g, W, "random", build=("scatter_out", "raw_out"))
+    for impl in ("bucket", "sort"):
+        with routing.impl_scope(impl):
+            _, res = sv.run(pg, variant="composed")
+        chan = sv.composed_channels()
+        per_component = sum(
+            res.bytes_under(f"sv/{key}") for key in chan.components)
+        assert per_component == res.total_bytes
+        per_msgs = sum(
+            res.msgs_under(f"sv/{key}") for key in chan.components)
+        assert per_msgs == res.total_msgs
+
+
+# ---------------------------------------------------------------------------
+# data plane on/off: mode parity and cross-impl bit-identity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("impl", ("bucket", "sort"))
+def test_mode_parity_with_dataplane_on_and_off(impl):
+    """fused/chunked/host stay bit-identical (states, steps, stats) with
+    the new data plane on (bucket) and off (sort) — and the two impls are
+    bit-identical to each other."""
+    from repro.algorithms import sv
+    from repro.graph import generators as gen, pgraph
+
+    g = gen.rmat(7, edge_factor=4, seed=5).symmetrized()
+    pg = pgraph.partition_graph(
+        g, W, "random", build=("scatter_out", "raw_out"))
+    results = {}
+    for mode in MODES:
+        lab, res = sv.run(pg, variant="both", mode=mode, chunk_size=3,
+                          route_impl=impl)
+        results[mode] = (lab, res)
+        assert res.route_impl == impl
+    ref_lab, ref_res = results["host"]
+    for mode in ("fused", "chunked"):
+        lab, res = results[mode]
+        np.testing.assert_array_equal(ref_lab, lab)
+        assert res.steps == ref_res.steps
+        assert res.bytes_by_channel == ref_res.bytes_by_channel
+        assert res.msgs_by_channel == ref_res.msgs_by_channel
+    # stash for the cross-impl comparison below
+    _CROSS_IMPL[impl] = (ref_lab, ref_res.bytes_by_channel)
+
+
+_CROSS_IMPL = {}
+
+
+@pytest.mark.slow
+def test_cross_impl_bit_identity():
+    if {"bucket", "sort"} <= set(_CROSS_IMPL):
+        lab_b, bytes_b = _CROSS_IMPL["bucket"]
+        lab_s, bytes_s = _CROSS_IMPL["sort"]
+        np.testing.assert_array_equal(lab_b, lab_s)
+        assert bytes_b == bytes_s
+
+
+# ---------------------------------------------------------------------------
+# density-adaptive exchange
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("threshold,expect_dense,expect_sparse",
+                         [(0.0, True, False), (1.1, False, True)])
+def test_density_adaptive_combine_extremes(threshold, expect_dense,
+                                           expect_sparse):
+    """Forced thresholds on the wcc switch: only the chosen plane's
+    traffic is accounted and labels never change."""
+    from repro.algorithms import wcc
+    from repro.graph import generators as gen, pgraph
+
+    g = gen.rmat(7, edge_factor=4, seed=1).symmetrized()
+    pg = pgraph.partition_graph(
+        g, W, "random", build=("scatter_out", "raw_out"))
+    lab_basic, _ = wcc.run(pg, variant="basic")
+    lab, res = wcc.run(pg, variant="switch", dense_threshold=threshold)
+    np.testing.assert_array_equal(lab_basic, lab)
+    assert (res.bytes_under("wcc/dense") > 0) == expect_dense
+    assert (res.bytes_under("wcc/sparse") > 0) == expect_sparse
+
+
+# ---------------------------------------------------------------------------
+# configuration surface: env var -> Engine knob -> RunResult
+# ---------------------------------------------------------------------------
+
+
+def test_use_kernel_env_and_scope(monkeypatch):
+    monkeypatch.delenv("REPRO_USE_KERNEL", raising=False)
+    assert kops.resolve_use_kernel() == (jax.default_backend() == "tpu")
+    monkeypatch.setenv("REPRO_USE_KERNEL", "1")
+    assert kops.resolve_use_kernel()
+    monkeypatch.setenv("REPRO_USE_KERNEL", "off")
+    assert not kops.resolve_use_kernel()
+    with kops.use_kernel_scope(True):
+        assert kops.resolve_use_kernel()     # scope beats env
+        assert not kops.resolve_use_kernel(False)  # explicit beats scope
+
+
+def test_engine_knobs_reach_run_result():
+    from repro.algorithms import get_program
+    from repro.graph import generators as gen, pgraph
+    from repro.pregel.engine import Engine
+
+    spec_g = gen.rmat(7, edge_factor=4, seed=0).symmetrized()
+    pg = pgraph.partition_graph(spec_g, W, "random", build=("raw_out",))
+    prog = get_program("wcc:basic")
+    eng = Engine(route_impl="sort", use_kernel=False)
+    res = eng.run(prog, pg)
+    assert res.route_impl == "sort" and res.use_kernel is False
+    # same engine, same graph: cached; a different data plane is a
+    # different engine and a fresh compile
+    eng2 = Engine(route_impl="bucket", use_kernel=False)
+    res2 = eng2.run(prog, pg)
+    assert res2.route_impl == "bucket"
+    assert eng.compiles == 1 and eng2.compiles == 1
+    np.testing.assert_array_equal(res.output, res2.output)
+    assert res.bytes_by_channel == res2.bytes_by_channel
