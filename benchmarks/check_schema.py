@@ -31,12 +31,20 @@ EXPECTED = {
         "workers", "dataset", "scales", "use_kernel_default",
         "route_impl_default", "route", "combine", "headline",
     },
+    "BENCH_query_throughput.json": {
+        "scale", "workers", "q", "repeats", "mode", "programs", "headline",
+    },
 }
 
 # Required keys inside nested blocks (artifact basename -> path -> keys).
 NESTED = {
     "BENCH_channel_dataplane.json": {
         "headline": {"largest_scale", "route_speedup", "target"},
+    },
+    "BENCH_query_throughput.json": {
+        "headline": {"program", "scale", "q", "speedup", "target",
+                     "queries_per_s_batched", "queries_per_s_serial",
+                     "meets_target"},
     },
 }
 

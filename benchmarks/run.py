@@ -47,8 +47,11 @@ def main() -> None:
         print()
         superstep_fusion.run_and_write(scale + 1)
 
-    print("\nengine session (compile-once across tables):",
-          tables.session_stats())
+    stats = tables.session_stats()
+    hit_rate = stats["cache_hits"] / max(stats["runs"], 1)
+    print("\nengine session (compile-once across tables):", stats,
+          f"(per-run cache hits: {stats['cache_hits']}/{stats['runs']}"
+          f" = {hit_rate:.0%})")
 
     print("\n== CSV ==")
     common.print_csv()

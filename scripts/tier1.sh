@@ -37,4 +37,12 @@ python -m benchmarks.channel_dataplane --scale 10 --repeats 2 \
   --out "$smoke_dir/BENCH_channel_dataplane.json"
 # the smoke artifact and every committed BENCH_*.json share one schema
 python -m benchmarks.check_schema "$smoke_dir/BENCH_channel_dataplane.json"
+
+echo "== batched query plane (smoke) =="
+python -m repro bench-batch --scale 10 --queries 4 --workers 4 \
+  --keys pagerank:personal,sssp:prop
+python -m benchmarks.query_throughput --scale 10 --queries 4 --repeats 1 \
+  --keys pagerank:personal,sssp:prop \
+  --out "$smoke_dir/BENCH_query_throughput.json"
+python -m benchmarks.check_schema "$smoke_dir/BENCH_query_throughput.json"
 echo "tier1: all stages pass"

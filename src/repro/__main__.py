@@ -11,6 +11,12 @@ Subcommands:
   bench   run a set of programs through one compile-once Engine per mode
           and print paper-style rows (supersteps / messages / bytes /
           wall time), optionally writing JSON.
+  bench-batch
+          the batched query plane: run every query-parametric program
+          (or ``--keys``) over Q queries, once through one batched
+          ``Engine.run_batch`` loop and once as a serial per-query loop,
+          verify per-query outputs are bit-identical, and print
+          queries/sec for both plus the speedup.
 
 Examples:
 
@@ -18,14 +24,17 @@ Examples:
   python -m repro run wcc --scale 9
   python -m repro run sv:composed --scale 10 --mode fused --repeat 2
   python -m repro bench --scale 10 --keys wcc:basic,wcc:switch --json out.json
+  python -m repro bench-batch --scale 10 --queries 16
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+import time
 
-from repro.algorithms import ALGORITHMS, DEFAULT_VARIANT, REGISTRY, resolve
+from repro.algorithms import (ALGORITHMS, BATCHED, DEFAULT_VARIANT, REGISTRY,
+                              resolve)
 from repro.graph import pgraph
 from repro.pregel.engine import Engine
 
@@ -131,6 +140,60 @@ def cmd_bench(args) -> int:
     return 0
 
 
+def cmd_bench_batch(args) -> int:
+    import numpy as np
+
+    keys = args.keys.split(",") if args.keys else list(BATCHED)
+    q = args.queries
+    print(f"== bench-batch (scale {args.scale}, W={args.workers}, Q={q}, "
+          f"mode {args.mode}) ==")
+    rows = []
+    for name in keys:
+        spec = resolve(name)
+        if spec.make_queries is None:
+            print(f"  {spec.key:22s} (no query axis — skipped)")
+            continue
+        graph, pg, inputs, prog = _prepare(spec, args)
+        queries = spec.queries(graph, args.seed, q)
+        eng = Engine(mode=args.mode, chunk_size=args.chunk_size)
+        batched = lambda: eng.run_batch(prog, pg, queries,
+                                        max_steps=args.max_steps)
+        one = lambda s: eng.run_batch(prog, pg, [s],
+                                      max_steps=args.max_steps)
+        # warm both executables, then verify the batch against the
+        # serial loop query by query before timing anything
+        res_b = batched()
+        serial = [one(s) for s in queries]
+        for qi in range(len(queries)):
+            np.testing.assert_array_equal(
+                np.asarray(res_b.outputs[qi]),
+                np.asarray(serial[qi].outputs[0]))
+        t0 = time.perf_counter()
+        batched()
+        t_batched = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for s in queries:
+            one(s)
+        t_serial = time.perf_counter() - t0
+        row = {"program": spec.key, "q": len(queries),
+               "supersteps": res_b.steps,
+               "queries_per_s_serial": len(queries) / t_serial,
+               "queries_per_s_batched": len(queries) / t_batched,
+               "speedup": t_serial / t_batched,
+               "bytes": res_b.total_bytes}
+        rows.append(row)
+        print(f"  {spec.key:22s} steps {res_b.steps:4d}  "
+              f"serial {row['queries_per_s_serial']:8.1f} q/s  "
+              f"batched {row['queries_per_s_batched']:8.1f} q/s  "
+              f"speedup {row['speedup']:6.2f}x  [outputs bit-identical]")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"scale": args.scale, "workers": args.workers,
+                       "q": q, "mode": args.mode, "rows": rows}, f, indent=2)
+        print(f"wrote {args.json}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro", description=__doc__,
@@ -172,6 +235,20 @@ def main(argv=None) -> int:
                          help="comma list of execution modes")
     p_bench.add_argument("--json", default=None, help="write rows to JSON")
     p_bench.set_defaults(fn=cmd_bench)
+
+    p_bb = sub.add_parser(
+        "bench-batch",
+        help="batched query plane: run_batch vs a serial per-query loop")
+    p_bb.add_argument("--keys", default=None,
+                      help="comma list of batched programs "
+                           "(default: every query-parametric program)")
+    common(p_bb)
+    p_bb.add_argument("--mode", default="fused",
+                      choices=("host", "fused", "chunked"))
+    p_bb.add_argument("--queries", type=int, default=16,
+                      help="batch size Q")
+    p_bb.add_argument("--json", default=None, help="write rows to JSON")
+    p_bb.set_defaults(fn=cmd_bench_batch)
 
     args = ap.parse_args(argv)
     return args.fn(args)

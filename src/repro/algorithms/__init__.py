@@ -27,7 +27,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.algorithms import msf, pagerank, pointer_jumping, scc, sssp, sv, wcc
+from repro.algorithms import (msf, pagerank, pointer_jumping, reachability,
+                              scc, sssp, sv, wcc)
 from repro.graph import generators as gen, oracles
 from repro.pregel.program import VertexProgram
 
@@ -54,6 +55,11 @@ class ProgramSpec:
     legacy: ``(pg, inputs, mode, chunk_size) -> (output, RunResult)`` via
       the backward-compatible module ``run()`` wrapper — the bit-parity
       reference for registry-driven runs.
+    make_queries: optional ``(graph, seed, q) -> list`` of Q query values
+      for the program's query axis (``Engine.run_batch``) — set iff the
+      factory's programs declare ``query_init`` (the spec is *batched*).
+    query_knob: the factory knob one query value binds to (e.g.
+      ``"source"``) — how a batched query is replayed as a single run.
     test_scale: graph scale the test sweep / CLI default to.
     """
 
@@ -66,10 +72,18 @@ class ProgramSpec:
     make_inputs: Optional[Callable] = None
     check: Optional[Callable] = None
     legacy: Optional[Callable] = None
+    make_queries: Optional[Callable] = None
+    query_knob: Optional[str] = None
     test_scale: int = 8
 
     def inputs(self, graph: gen.EdgeList, seed: int = 0) -> Dict[str, Any]:
         return dict(self.make_inputs(graph, seed)) if self.make_inputs else {}
+
+    def queries(self, graph: gen.EdgeList, seed: int = 0,
+                q: int = 8) -> list:
+        if self.make_queries is None:
+            raise ValueError(f"{self.key} has no query axis")
+        return list(self.make_queries(graph, seed, q))
 
     def make(self, graph: Optional[gen.EdgeList] = None, seed: int = 0,
              **knobs) -> VertexProgram:
@@ -113,6 +127,14 @@ def _forest_inputs(graph, seed):
     return {"parents": gen.random_tree_parents(graph.n, seed=1 + seed)}
 
 
+def _random_sources(graph, seed, q):
+    """Q distinct source vertices — the default query batch (landmark
+    distances / reachability fan-out / per-user personalization)."""
+    rng = np.random.default_rng(33 + seed)
+    return rng.choice(graph.n, size=min(q, graph.n),
+                      replace=False).astype(int).tolist()
+
+
 # --- oracle checks ----------------------------------------------------------
 
 
@@ -124,6 +146,17 @@ def _check_components(graph, pg, res, inputs):
 def _check_pagerank(graph, pg, res, inputs):
     want = oracles.pagerank_oracle(graph, iters=res.steps)
     np.testing.assert_allclose(res.output, want, rtol=1e-4, atol=1e-7)
+
+
+def _check_ppr(graph, pg, res, inputs):
+    want = oracles.personalized_pagerank_oracle(
+        graph, source=inputs.get("source", 0), iters=res.steps)
+    np.testing.assert_allclose(res.output, want, rtol=1e-4, atol=1e-7)
+
+
+def _check_reach(graph, pg, res, inputs):
+    want = reachability.bfs_oracle(graph, source=inputs.get("source", 0))
+    np.testing.assert_array_equal(res.output, want)
 
 
 def _check_sssp(graph, pg, res, inputs):
@@ -189,11 +222,23 @@ def _specs():
             make_graph=_sym_rmat, check=_check_components)
 
     for v in pagerank.VARIANTS:
+        if v == "personal":
+            continue  # registered below with its query-axis recipe
         add(out, "pagerank", v, pagerank.program,
             lambda pg, inputs, mode, cs, _v=v: pagerank.run(
                 pg, variant=_v, mode=mode, chunk_size=cs),
             build=("scatter_out", "raw_out"),
             make_graph=_directed_rmat, check=_check_pagerank)
+
+    add(out, "pagerank", "personal", pagerank.program,
+        lambda pg, inputs, mode, cs: pagerank.run(
+            pg, variant="personal", source=inputs.get("source", 0),
+            mode=mode, chunk_size=cs),
+        build=("scatter_out",),
+        make_graph=_directed_rmat,
+        make_inputs=lambda graph, seed: {"source": 0},
+        check=_check_ppr,
+        make_queries=_random_sources, query_knob="source")
 
     for v in sssp.VARIANTS:
         add(out, "sssp", v, sssp.program,
@@ -203,7 +248,19 @@ def _specs():
             build=("prop_out", "raw_out"),
             make_graph=_weighted_rmat,
             make_inputs=lambda graph, seed: {"source": 0},
-            check=_check_sssp)
+            check=_check_sssp,
+            make_queries=_random_sources, query_knob="source")
+
+    for v in reachability.VARIANTS:
+        add(out, "reach", v, reachability.program,
+            lambda pg, inputs, mode, cs, _v=v: reachability.run(
+                pg, inputs.get("source", 0), variant=_v, mode=mode,
+                chunk_size=cs),
+            build=("raw_out",),
+            make_graph=_directed_rmat,
+            make_inputs=lambda graph, seed: {"source": 0},
+            check=_check_reach,
+            make_queries=_random_sources, query_knob="source")
 
     for v in msf.VARIANTS:
         add(out, "msf", v, msf.program,
@@ -242,9 +299,15 @@ DEFAULT_VARIANT: Dict[str, str] = {
     "sssp": "basic",
     "pagerank": "scatter",
     "pj": "reqresp",
+    "reach": "basic",
 }
 
 ALGORITHMS: Tuple[str, ...] = tuple(sorted(DEFAULT_VARIANT))
+
+#: specs with a query axis — what ``Engine.run_batch`` / the batched
+#: parity sweep / ``python -m repro bench-batch`` iterate over
+BATCHED: Tuple[str, ...] = tuple(
+    sorted(k for k, s in REGISTRY.items() if s.make_queries is not None))
 
 
 def resolve(name: str) -> ProgramSpec:

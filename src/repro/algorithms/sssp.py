@@ -11,6 +11,10 @@ Variants:
 :class:`~repro.pregel.program.VertexProgram` — the source vertex (old-id)
 is the problem input, resolved per graph inside ``init``; ``run`` is the
 thin one-shot wrapper over :class:`repro.pregel.engine.Engine`.
+
+The source is also the program's *query axis* (``query_init``):
+``Engine.run_batch(prog, pg, sources)`` computes landmark distances —
+one distance array per source — in a single compiled batched loop.
 """
 from __future__ import annotations
 
@@ -35,8 +39,8 @@ def program(variant: str = "basic", *, source: int = 0,
     if variant not in VARIANTS:
         raise ValueError(variant)
 
-    def dist0_of(pg):
-        src_new = int(pg.new_of_old.arr[source])
+    def dist0_of(pg, src_old):
+        src_new = int(pg.new_of_old.arr[src_old])
         ids = pg.global_ids()
         return jnp.where(ids == src_new, 0.0, INF).astype(jnp.float32), src_new
 
@@ -46,10 +50,13 @@ def program(variant: str = "basic", *, source: int = 0,
     if variant == "prop":
         add_w = lambda v, w: v + (w[:, None] if v.ndim == 2 else w)
 
-        def init(pg):
-            dist0, _ = dist0_of(pg)
+        def query_init(pg, src_old):
+            dist0, _ = dist0_of(pg, src_old)
             return {"dist": dist0,
                     "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
+
+        def init(pg):
+            return query_init(pg, source)
 
         def step(ctx, gs, state, step_idx):
             dist, rounds, iters = prop.propagate(
@@ -60,13 +67,16 @@ def program(variant: str = "basic", *, source: int = 0,
 
         return VertexProgram(
             name="sssp:prop", init=init, step=step, extract=extract,
-            max_steps=1,
+            query_init=query_init, max_steps=1,
             meta={"algorithm": "sssp", "variant": variant, "source": source},
         )
 
-    def init(pg):
-        dist0, src_new = dist0_of(pg)
+    def query_init(pg, src_old):
+        dist0, src_new = dist0_of(pg, src_old)
         return {"dist": dist0, "active": pg.global_ids() == src_new}
+
+    def init(pg):
+        return query_init(pg, source)
 
     def step(ctx, gs, state, step_idx):
         dist, active = state["dist"], state["active"]
@@ -86,7 +96,7 @@ def program(variant: str = "basic", *, source: int = 0,
 
     return VertexProgram(
         name="sssp:basic", init=init, step=step, extract=extract,
-        max_steps=max_steps,
+        query_init=query_init, max_steps=max_steps,
         meta={"algorithm": "sssp", "variant": variant, "source": source},
     )
 

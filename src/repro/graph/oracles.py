@@ -21,6 +21,25 @@ def pagerank_oracle(g: EdgeList, iters: int = 20, damping: float = 0.85):
     return pr
 
 
+def personalized_pagerank_oracle(g: EdgeList, source: int, iters: int = 20,
+                                 damping: float = 0.85):
+    """Personalized PageRank: teleport and sink mass go to ``source``."""
+    n = g.n
+    out_deg = np.zeros(n, np.int64)
+    np.add.at(out_deg, g.edges[:, 0], 1)
+    e = np.zeros(n)
+    e[source] = 1.0
+    pr = e.copy()
+    src, dst = g.edges[:, 0], g.edges[:, 1]
+    for _ in range(iters):
+        contrib = np.where(out_deg > 0, pr / np.maximum(out_deg, 1), 0.0)
+        incoming = np.zeros(n)
+        np.add.at(incoming, dst, contrib[src])
+        sink = pr[out_deg == 0].sum()
+        pr = (1 - damping) * e + damping * (incoming + sink * e)
+    return pr
+
+
 def sssp_oracle(g: EdgeList, source: int):
     """Bellman-Ford (weights default 1)."""
     n = g.n

@@ -21,18 +21,35 @@ paid. Correctness does not depend on the cache: a shape signature covers
 *every* static that enters the compiled loop (see
 :func:`repro.pregel.runtime.graph_signature`), so a hit is bit-identical
 to a fresh compile.
+
+:meth:`Engine.run_batch` is the batched query plane: one compiled loop
+advances Q query instances (e.g. Q SSSP sources) of a query-parametric
+program (``VertexProgram.query_init``) per superstep, with per-query
+halt voting and per-query step/traffic attribution. The compile-cache
+key uses the *power-of-two-bucketed* batch cap, not Q itself — the
+batch is padded to the bucket by repeating the first query, so Q=20 and
+Q=27 share one executable (the same trick the graph plans play with
+their slot caps).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
+import jax.numpy as jnp
 
 from repro.core import routing
 from repro.graph.pgraph import PartitionedGraph
 from repro.kernels import ops as kops
 from repro.pregel import runtime
 from repro.pregel.program import VertexProgram
+
+
+def bucket_queries(q: int) -> int:
+    """Pow2 batch cap: the compiled query-axis width for a Q-query batch."""
+    if q < 1:
+        raise ValueError(f"need at least one query, got {q}")
+    return 1 << (q - 1).bit_length()
 
 
 class Engine:
@@ -65,6 +82,7 @@ class Engine:
         self._cache: Dict[Tuple, runtime.CompiledSupersteps] = {}
         self.compiles = 0
         self.cache_hits = 0
+        self.runs = 0
 
     # -- introspection ----------------------------------------------------
 
@@ -74,9 +92,48 @@ class Engine:
 
     def stats(self) -> Dict[str, int]:
         return {"compiles": self.compiles, "cache_hits": self.cache_hits,
-                "cached_executables": self.cache_size}
+                "cached_executables": self.cache_size, "runs": self.runs}
 
     # -- execution --------------------------------------------------------
+
+    def _compile_cached(self, prog: VertexProgram, pg: PartitionedGraph,
+                        state0, ms: int, co: bool, key_extra: Tuple = (),
+                        num_queries: Optional[int] = None):
+        """The one cache-lookup path (run and run_batch share it, so a
+        new config knob lands in both keys or neither): return
+        ``(exe, hit)`` and bump the session counters."""
+        key = (prog, ms, co, self.use_kernel, self.route_impl,
+               runtime.graph_signature(pg),
+               runtime.state_signature(state0)) + key_extra
+        exe = self._cache.get(key)
+        hit = exe is not None
+        if not hit:
+            # compile_supersteps/execute scrub the graph themselves, so
+            # any graph with this signature replays the executable
+            exe = runtime.compile_supersteps(
+                pg, prog.step, state0, max_steps=ms, backend=self.backend,
+                mesh=self.mesh, check_overflow=co, mode=self.mode,
+                chunk_size=self.chunk_size, channels=prog.channels,
+                use_kernel=self.use_kernel, route_impl=self.route_impl,
+                num_queries=num_queries,
+            )
+            self._cache[key] = exe
+            self.compiles += 1
+        else:
+            self.cache_hits += 1
+        self.runs += 1
+        return exe, hit
+
+    def _stamp(self, res: runtime.RunResult, prog: VertexProgram,
+               exe: runtime.CompiledSupersteps,
+               hit: bool) -> runtime.RunResult:
+        if not hit:
+            res.compile_time_s = exe.compile_time_s
+        res.program = prog.name
+        res.cache_hit = hit
+        res.engine_compiles = self.compiles
+        res.engine_cache_hits = self.cache_hits
+        return res
 
     def run(self, prog: VertexProgram, pg: PartitionedGraph, *,
             max_steps: Optional[int] = None,
@@ -91,40 +148,84 @@ class Engine:
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
         state0 = prog.init(pg)
-        key = (prog, ms, co, self.use_kernel, self.route_impl,
-               runtime.graph_signature(pg), runtime.state_signature(state0))
-        exe = self._cache.get(key)
-        hit = exe is not None
-        if not hit:
-            # compile_supersteps/execute scrub the graph themselves, so
-            # any graph with this signature replays the executable
-            exe = runtime.compile_supersteps(
-                pg, prog.step, state0, max_steps=ms, backend=self.backend,
-                mesh=self.mesh, check_overflow=co, mode=self.mode,
-                chunk_size=self.chunk_size, channels=prog.channels,
-                use_kernel=self.use_kernel, route_impl=self.route_impl,
-            )
-            self._cache[key] = exe
-            self.compiles += 1
-        else:
-            self.cache_hits += 1
-
-        res = exe.execute(pg, state0)
-        if not hit:
-            res.compile_time_s = exe.compile_time_s
-        res.program = prog.name
-        res.cache_hit = hit
-        res.engine_compiles = self.compiles
-        res.engine_cache_hits = self.cache_hits
+        exe, hit = self._compile_cached(prog, pg, state0, ms, co)
+        res = self._stamp(exe.execute(pg, state0), prog, exe, hit)
         res.output = prog.extract(pg, res.state)
         return res
 
     def run_many(self, prog: VertexProgram,
                  graphs: Iterable[PartitionedGraph],
-                 **kw) -> List[runtime.RunResult]:
+                 **kw) -> "ManyResults":
         """Run one program over many graphs; same-shape graphs after the
-        first ride the cached executable."""
-        return [self.run(prog, pg, **kw) for pg in graphs]
+        first ride the cached executable. The returned list exposes the
+        per-item compile-cache outcome (``.cache_hits`` / ``.hit_count``)
+        so a sweep can report exactly which items replayed for free."""
+        return ManyResults(self.run(prog, pg, **kw) for pg in graphs)
+
+    def run_batch(self, prog: VertexProgram, pg: PartitionedGraph,
+                  queries: Sequence[Any], *,
+                  max_steps: Optional[int] = None,
+                  check_overflow: Optional[bool] = None
+                  ) -> runtime.RunResult:
+        """Run Q query instances of ``prog`` on ``pg`` in ONE compiled
+        loop (query axis vmapped inside the worker mapping, per-query
+        halt voting — see ``repro.pregel.runtime``).
+
+        ``queries`` are the per-query problem inputs fed to
+        ``prog.query_init(pg, query)`` (e.g. SSSP source vertices). The
+        batch is padded to the pow2 bucket cap by repeating the first
+        query, so nearby batch sizes share one executable; padded lanes
+        are sliced away before anything is reported.
+
+        Returns the RunResult with per-query views: ``outputs`` (list of
+        Q extracted answers — also on ``output``), ``query_steps``,
+        ``query_halted``, and ``query_bytes``/``query_msgs``; the
+        dict-of-int totals (``bytes_by_channel``…) cover the Q real
+        queries only.
+        """
+        if prog.query_init is None:
+            raise ValueError(
+                f"program {prog.name!r} declares no query axis "
+                "(VertexProgram.query_init) — it cannot be batched")
+        queries = list(queries)
+        q = len(queries)
+        cap = bucket_queries(q)
+        per_query = [prog.query_init(pg, query) for query in queries]
+        # pad lanes reuse the first real state by reference — jnp.stack
+        # copies anyway, so re-running query_init for them buys nothing
+        per_query += [per_query[0]] * (cap - q)
+        state0 = jax.tree_util.tree_map(
+            lambda *leaves: jnp.stack(leaves, axis=1), *per_query)
+
+        ms = prog.max_steps if max_steps is None else max_steps
+        co = prog.check_overflow if check_overflow is None else check_overflow
+        exe, hit = self._compile_cached(prog, pg, state0, ms, co,
+                                        key_extra=("batch", cap),
+                                        num_queries=cap)
+        # the executor slices every per-query view/total/error to the Q
+        # real lanes; only the raw carried state keeps the padded width
+        res = self._stamp(exe.execute(pg, state0, num_real_queries=q),
+                          prog, exe, hit)
+        res.outputs = [
+            prog.extract(pg, jax.tree_util.tree_map(
+                lambda leaf, _qi=qi: leaf[:, _qi], res.state))
+            for qi in range(q)
+        ]
+        res.output = res.outputs
+        return res
+
+
+class ManyResults(List[runtime.RunResult]):
+    """``Engine.run_many``'s return value: a plain result list that also
+    exposes the per-item compile-cache outcome."""
+
+    @property
+    def cache_hits(self) -> List[bool]:
+        return [r.cache_hit for r in self]
+
+    @property
+    def hit_count(self) -> int:
+        return sum(r.cache_hit for r in self)
 
 
 def run_program(prog: VertexProgram, pg: PartitionedGraph, *,

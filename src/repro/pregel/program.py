@@ -46,6 +46,13 @@ class VertexProgram:
     channels: optional explicit channel declaration (stat-key names, a
       composed channel with ``channel_names()``, or a mixed sequence).
       Declared programs skip the runtime's eval_shape dry trace.
+    query_init: optional ``query_init(pg, query) -> state0`` — the
+      query-parametric init that makes the program *batchable*:
+      ``Engine.run_batch(prog, pg, queries)`` stacks one state per query
+      along a query axis and advances all of them in one compiled loop
+      (the bound ``init`` stays the single-query default). ``step`` and
+      ``extract`` need no batch awareness — the runtime vmaps the step
+      over queries and extract is applied per query slice.
     max_steps: default superstep budget (overridable per run).
     check_overflow: whether capacity overflow aborts the run.
     meta: free-form introspection data — the registry stores the
@@ -61,6 +68,7 @@ class VertexProgram:
     step: Callable
     extract: Callable[[PartitionedGraph, Any], Any] = _identity_extract
     channels: Optional[Any] = None
+    query_init: Optional[Callable[[PartitionedGraph, Any], Any]] = None
     max_steps: int = 10_000
     check_overflow: bool = True
     meta: Mapping[str, Any] = dataclasses.field(default_factory=dict)

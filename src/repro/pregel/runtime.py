@@ -41,6 +41,18 @@ Voting-to-halt: the step function returns a local halt vote; the runtime
 ANDs votes across workers (psum). In fused/chunked mode the AND result
 feeds the loop condition on device; in host mode it is pulled back and
 checked in Python.
+
+Batched query plane (``num_queries=Q``): the *same* step function is
+vmapped over a query axis **inside** the worker mapping — state leaves
+carry ``(W, Q, n_loc, ...)``, one compiled loop advances all Q query
+instances (e.g. Q SSSP sources) per superstep. Halting is per query: a
+``(Q,)`` halted vector lives in the carry, queries that voted halt have
+their state frozen and their traffic masked to zero from the next step
+on (so per-query steps/bytes/msgs are bit-identical to Q independent
+runs), and the loop exits when every query has voted halt. Per-query
+step counts and per-query per-channel traffic come back on the
+``RunResult`` (``query_steps`` / ``query_bytes`` / ``query_msgs``).
+``repro.pregel.engine.Engine.run_batch`` is the session API on top.
 """
 from __future__ import annotations
 
@@ -93,6 +105,16 @@ class RunResult:
     # jnp reference, and the routed-exchange implementation.
     use_kernel: bool = False
     route_impl: str = ""
+    # Batched-query metadata (num_queries > 0 iff the loop carried a
+    # query axis). The per-query arrays are host numpy, length Q;
+    # bytes_by_channel/msgs_by_channel hold the across-query totals.
+    # ``outputs`` is the per-query extracted answer list (Engine.run_batch).
+    num_queries: int = 0
+    query_steps: Any = None            # (Q,) int64
+    query_halted: Any = None           # (Q,) bool
+    query_bytes_by_channel: Optional[Dict[str, Any]] = None  # name->(Q,)
+    query_msgs_by_channel: Optional[Dict[str, Any]] = None   # name->(Q,)
+    outputs: Any = None
 
     @property
     def total_bytes(self) -> int:
@@ -113,6 +135,16 @@ class RunResult:
         """Total messages accounted under a namespaced key prefix."""
         return int(sum(v for k, v in self.msgs_by_channel.items()
                        if key_under(k, prefix)))
+
+    # -- per-query (batched run) views ------------------------------------
+
+    def query_bytes(self, q: int) -> Dict[str, int]:
+        """Per-channel byte totals attributed to query ``q``."""
+        return {k: int(v[q]) for k, v in self.query_bytes_by_channel.items()}
+
+    def query_msgs(self, q: int) -> Dict[str, int]:
+        """Per-channel message totals attributed to query ``q``."""
+        return {k: int(v[q]) for k, v in self.query_msgs_by_channel.items()}
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
@@ -201,14 +233,26 @@ class CompiledSupersteps:
     # resolved data-plane configuration baked into the compiled loop
     use_kernel: bool = False
     route_impl: str = "bucket"
+    # query-axis width the loop was lowered with (None = unbatched)
+    num_queries: Optional[int] = None
 
-    def execute(self, graph: PartitionedGraph, state0: Any) -> RunResult:
+    def execute(self, graph: PartitionedGraph, state0: Any,
+                num_real_queries: Optional[int] = None) -> RunResult:
         """One run. ``compile_time_s`` on the result is 0 — the caller
-        that paid the compile stamps it (run_supersteps / Engine miss)."""
+        that paid the compile stamps it (run_supersteps / Engine miss).
+
+        num_real_queries: for a batched loop, how many leading query
+        lanes are real (the rest are bucket padding) — every per-query
+        view, total, and overflow report covers only those lanes."""
         # the executable was lowered against the scrubbed treedef, so any
         # same-signature graph replays (name/new_of_old identity dropped)
         graph = scrub_graph(graph)
-        if self.mode == "host":
+        if self.num_queries is not None:
+            res = _exec_batched(self._fn, graph, state0, self.mode,
+                                self.max_steps, self.check_overflow,
+                                self.num_queries,
+                                num_real_queries or self.num_queries)
+        elif self.mode == "host":
             res = _exec_host(self._fn, graph, state0, self.max_steps,
                              self.check_overflow)
         elif self.mode == "fused":
@@ -235,6 +279,7 @@ def compile_supersteps(
     channels: Optional[Any] = None,
     use_kernel: Optional[bool] = None,
     route_impl: Optional[str] = None,
+    num_queries: Optional[int] = None,
 ) -> CompiledSupersteps:
     """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
     shape, without running it. See :func:`run_supersteps` for semantics.
@@ -243,6 +288,12 @@ def compile_supersteps(
     whole compile (None = resolve from env/backend defaults, see
     ``repro.kernels.ops`` / ``repro.core.routing``); explicit per-call
     channel arguments inside the step still win.
+
+    num_queries=Q lowers the *batched* loop: the step is vmapped over a
+    query axis inside the worker mapping, ``state0`` leaves must carry
+    ``(W, Q, n_loc, ...)``, and halting/step counts/traffic are tracked
+    per query (see the module docstring). The step function itself is
+    unchanged — it still sees one query's ``(n_loc, ...)`` shard.
     """
     # lower against the scrubbed graph: the compiled treedef must not
     # capture the host-only identity statics, or execute() could only
@@ -270,18 +321,52 @@ def compile_supersteps(
                 jnp.asarray(overflow, jnp.int32), axis) > 0
             traced_names.update(ctx.touched)  # host-side, at trace time
             nbytes, nmsgs = ctx.stats()
+            if backend == "shard_map":
+                # vmap surfaces one stat scalar per worker ((W,) leaves,
+                # summed host-side); shard_map's replicated out-spec would
+                # surface only shard 0's local count, so reduce to the
+                # global per-step total on device — same totals, either
+                # backend
+                psum = lambda v: jax.lax.psum(v, axis)
+                nbytes = jax.tree_util.tree_map(psum, nbytes)
+                nmsgs = jax.tree_util.tree_map(psum, nmsgs)
             return new_state, halt_all, overflow_any, nbytes, nmsgs
 
         return shard_step
 
     def map_shards(shard_step):
+        if num_queries is not None:
+            # the query axis rides INSIDE the worker mapping: each worker
+            # advances all Q query instances of its shard; the axis-name
+            # collectives inside the step batch transparently over Q
+            shard_step = jax.vmap(shard_step, in_axes=(None, 0, None))
         if backend == "vmap":
             return jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
         if backend == "shard_map":
             assert mesh is not None
+            if mesh.shape[axis] != W:
+                raise ValueError(
+                    f"shard_map backend needs one worker per mesh device "
+                    f"along {axis!r}: graph has W={W}, mesh axis size "
+                    f"{mesh.shape[axis]}")
             P = jax.sharding.PartitionSpec
+
+            def device_step(g_shard, state_shard, step_idx):
+                # shard_map keeps the sharded axis as a leading size-1
+                # dim; the step code (like vmap's) works on the bare
+                # shard — peel it off and put it back on the state
+                one = lambda x: x[0]
+                new_state, halt, ovf, nb, nm = shard_step(
+                    jax.tree_util.tree_map(one, g_shard),
+                    jax.tree_util.tree_map(one, state_shard),
+                    step_idx,
+                )
+                new_state = jax.tree_util.tree_map(
+                    lambda x: x[None], new_state)
+                return new_state, halt, ovf, nb, nm
+
             return _shard_map(
-                shard_step,
+                device_step,
                 mesh=mesh,
                 in_specs=(P(axis), P(axis), P()),
                 out_specs=(P(axis), P(), P(), P(), P()),
@@ -306,8 +391,11 @@ def compile_supersteps(
 
             names = compose.channel_names_of(channels)
             # the mapped step's per-step stat leaf is (W,) under vmap (one
-            # scalar per logical worker) and () under shard_map (replicated)
+            # scalar per logical worker) and () under shard_map (replicated);
+            # a query axis appends Q as the trailing dimension
             stat_shape = (W,) if backend == "vmap" else ()
+            if num_queries is not None:
+                stat_shape = stat_shape + (num_queries,)
             registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
         elif mode in ("fused", "chunked"):
             probe = map_shards(make_shard_step(None))
@@ -321,7 +409,22 @@ def compile_supersteps(
         i0 = jnp.asarray(0, jnp.int32)
 
         tc = time.perf_counter()
-        if mode == "host":
+        if num_queries is not None:
+            h0 = jnp.zeros((num_queries,), bool)
+            if mode == "host":
+                fn = (jax.jit(_make_batched_step(mapped, num_queries))
+                      .lower(graph, state0, i0, h0).compile())
+            elif mode == "fused":
+                fn = (jax.jit(_make_batched_fused_loop(
+                        mapped, registry, max_steps, check_overflow,
+                        num_queries))
+                      .lower(graph, state0).compile())
+            else:
+                fn = (jax.jit(_make_batched_chunk(
+                        mapped, registry, max_steps, check_overflow,
+                        chunk_size, num_queries))
+                      .lower(graph, state0, i0, h0, h0).compile())
+        elif mode == "host":
             fn = jax.jit(mapped).lower(graph, state0, i0).compile()
         elif mode == "fused":
             fn = (
@@ -364,6 +467,7 @@ def compile_supersteps(
         _fn=fn,
         use_kernel=resolved_kernel,
         route_impl=resolved_route,
+        num_queries=num_queries,
     )
 
 
@@ -581,6 +685,260 @@ def _make_chunk(mapped, registry, max_steps, check_overflow, chunk_size):
         return state, i, halted, overflow, db, dm
 
     return chunk
+
+
+# ---------------------------------------------------------------------------
+# batched query plane: one loop advances Q query instances per superstep,
+# with per-query halt voting, frozen state for halted queries, and
+# per-query step/traffic attribution (engine.Engine.run_batch rides this)
+# ---------------------------------------------------------------------------
+
+
+def _qrow(x, q: int):
+    """(Q,) view of a per-query flag that may be worker-replicated
+    ((W, Q) under vmap, (Q,) under shard_map)."""
+    return jnp.asarray(x).reshape((-1, q))[0]
+
+
+def _qmask(live, leaf):
+    """Broadcast a (Q,) liveness mask against a (W, Q, ...) state leaf."""
+    return live.reshape((1,) + live.shape + (1,) * (leaf.ndim - 2))
+
+
+def _host_q(v, q: int) -> np.ndarray:
+    """Stat leaf with trailing query axis -> (Q,) int64 per-query totals
+    (sums any leading worker/chunk axes)."""
+    return np.asarray(v).astype(np.int64).reshape((-1, q)).sum(axis=0)
+
+
+def _make_batched_step(mapped, q: int):
+    """One batched superstep with the per-query bookkeeping folded in:
+    halted queries keep their state bit-for-bit (their lanes still
+    compute, the result is discarded) and contribute zero traffic and no
+    overflow. Shared by all three batched modes — host compiles it
+    directly, fused/chunked call it from their loop bodies."""
+
+    def bstep(graph, state, i, halted):
+        new_state, halt, ovf, db, dm = mapped(graph, state, i)
+        live = ~halted
+        new_state = jax.tree_util.tree_map(
+            lambda n, o: jnp.where(_qmask(live, n), n, o), new_state, state)
+        # stat leaves have the query axis last ((W, Q) / (Q,)) — the
+        # (Q,) mask broadcasts; the halting step itself still charges
+        # (live is the PRE-step vote, matching Q independent runs)
+        db = jax.tree_util.tree_map(lambda d: jnp.where(live, d, 0), db)
+        dm = jax.tree_util.tree_map(lambda d: jnp.where(live, d, 0), dm)
+        return (new_state, halted | _qrow(halt, q),
+                _qrow(ovf, q) & live, db, dm)
+
+    return bstep
+
+
+def _make_batched_fused_loop(mapped, registry, max_steps, check_overflow, q):
+    zeros = registry.zeros()
+    bstep = _make_batched_step(mapped, q)
+
+    def loop(graph, state):
+        def cond(carry):
+            _, i, halted, overflow, _, _, _, _ = carry
+            go = jnp.any(~halted) & (i < max_steps)
+            if check_overflow:
+                go = go & ~jnp.any(overflow)
+            return go
+
+        def body(carry):
+            state, i, halted, overflow, steps_q, nb, nm, wrapped = carry
+            new_state, halted2, ovf_q, db, dm = bstep(graph, state, i, halted)
+            nb2 = jax.tree_util.tree_map(jnp.add, nb, db)
+            nm2 = jax.tree_util.tree_map(jnp.add, nm, dm)
+            for old, new in ((nb, nb2), (nm, nm2)):
+                for o, n in zip(jax.tree_util.tree_leaves(old),
+                                jax.tree_util.tree_leaves(new)):
+                    wrapped = wrapped | jnp.any(n < o)
+            steps_q = steps_q + (~halted).astype(jnp.int32)
+            return (new_state, i + 1, halted2, overflow | ovf_q,
+                    steps_q, nb2, nm2, wrapped)
+
+        qz = jnp.zeros((q,), bool)
+        init = (state, jnp.asarray(0, jnp.int32), qz, qz,
+                jnp.zeros((q,), jnp.int32), zeros, zeros,
+                jnp.zeros((), bool))
+        return jax.lax.while_loop(cond, body, init)
+
+    return loop
+
+
+def _make_batched_chunk(mapped, registry, max_steps, check_overflow,
+                        chunk_size, q):
+    K = max(1, min(chunk_size, max_steps))
+    zeros = registry.zeros()
+    bstep = _make_batched_step(mapped, q)
+
+    def chunk(graph, state, i0, halted0, overflow0):
+        def body(carry, _):
+            state, i, halted, overflow, steps_q = carry
+            stop = jnp.all(halted) | (i >= max_steps)
+            if check_overflow:
+                stop = stop | jnp.any(overflow)
+
+            def do(operand):
+                state, i, halted, overflow, steps_q = operand
+                new_state, halted2, ovf_q, db, dm = bstep(
+                    graph, state, i, halted)
+                steps_q = steps_q + (~halted).astype(jnp.int32)
+                return ((new_state, i + 1, halted2, overflow | ovf_q,
+                         steps_q), (db, dm))
+
+            def skip(operand):
+                return (operand, (zeros, zeros))
+
+            return jax.lax.cond(stop, skip, do,
+                                (state, i, halted, overflow, steps_q))
+
+        (state, i, halted, overflow, steps_q), (db, dm) = jax.lax.scan(
+            body, (state, i0, halted0, overflow0,
+                   jnp.zeros((q,), jnp.int32)),
+            None, length=K)
+        return state, i, halted, overflow, steps_q, db, dm
+
+    return chunk
+
+
+def _raise_query_overflow(overflow_q: np.ndarray, steps: int):
+    qs = np.flatnonzero(overflow_q).tolist()
+    raise RuntimeError(
+        f"channel capacity overflow at superstep {steps - 1} for "
+        f"queries {qs} — increase the channel capacity in the routing plan"
+    )
+
+
+def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
+                    steps_q, q_real, mode, dispatches, wall, step_times,
+                    overhead, check_overflow) -> RunResult:
+    # report only the real leading lanes — bucket-padding lanes (which
+    # mirror query 0) never surface in views, totals, or errors
+    halted_q = halted_q[:q_real]
+    overflow_q = overflow_q[:q_real]
+    steps_q = steps_q[:q_real]
+    q_bytes = {k: v[:q_real] for k, v in q_bytes.items()}
+    q_msgs = {k: v[:q_real] for k, v in q_msgs.items()}
+    if check_overflow and overflow_q.any():
+        _raise_query_overflow(overflow_q, steps)
+    return RunResult(
+        state=state,
+        steps=steps,
+        halted=bool(halted_q.all()),
+        bytes_by_channel={k: int(v.sum()) for k, v in q_bytes.items()},
+        msgs_by_channel={k: int(v.sum()) for k, v in q_msgs.items()},
+        wall_time_s=wall,
+        step_times_s=step_times,
+        mode=mode,
+        dispatches=dispatches,
+        host_overhead_s=overhead,
+        num_queries=q_real,
+        query_steps=steps_q,
+        query_halted=halted_q,
+        query_bytes_by_channel=q_bytes,
+        query_msgs_by_channel=q_msgs,
+    )
+
+
+def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
+                  q, q_real) -> RunResult:
+    if mode == "fused":
+        t0 = time.perf_counter()
+        out = compiled(graph, state0)
+        t_enq = time.perf_counter()
+        state, steps, halted, overflow, steps_q, nb, nm, wrapped = out
+        jax.block_until_ready(state)
+        t_dev = time.perf_counter()
+        wall = t_dev - t0
+        if bool(np.asarray(wrapped)):
+            import warnings
+
+            warnings.warn(
+                "per-channel traffic counters overflowed int32 inside the "
+                "fused loop; bytes/msgs totals are unreliable — use "
+                "mode='chunked' (exact host-side int64 accumulation) for "
+                "runs this heavy",
+                RuntimeWarning,
+            )
+        overhead = (t_enq - t0) + (time.perf_counter() - t_dev)
+        return _batched_result(
+            state, int(np.asarray(steps)), np.asarray(halted),
+            np.asarray(overflow),
+            {k: _host_q(v, q) for k, v in nb.items()},
+            {k: _host_q(v, q) for k, v in nm.items()},
+            np.asarray(steps_q).astype(np.int64), q_real, mode, 1, wall,
+            [wall], overhead, check_overflow)
+
+    q_bytes: Dict[str, np.ndarray] = {}
+    q_msgs: Dict[str, np.ndarray] = {}
+
+    def acc(into, delta):
+        for k, v in delta.items():
+            row = _host_q(v, q)
+            into[k] = into.get(k, 0) + row
+
+    state = state0
+    halted = jnp.zeros((q,), bool)
+    steps_q = np.zeros((q,), np.int64)
+    overflow_acc = np.zeros((q,), bool)
+    step_times = []
+    dispatches = 0
+    overhead = 0.0
+    steps = 0
+    t0 = time.perf_counter()
+
+    if mode == "host":
+        for step in range(max_steps):
+            live = ~np.asarray(halted)
+            if not live.any():
+                break
+            ts = time.perf_counter()
+            state, halted, ovf_q, db, dm = compiled(
+                graph, state, jnp.asarray(step, jnp.int32), halted)
+            t_enq = time.perf_counter()
+            jax.block_until_ready(state)
+            t_dev = time.perf_counter()
+            step_times.append(t_dev - ts)
+            dispatches += 1
+            steps = step + 1
+            steps_q += live
+            acc(q_bytes, db)
+            acc(q_msgs, dm)
+            overflow_acc |= np.asarray(ovf_q)
+            overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
+            if check_overflow and overflow_acc[:q_real].any():
+                _raise_query_overflow(overflow_acc[:q_real], steps)
+    else:  # chunked
+        i = jnp.asarray(0, jnp.int32)
+        overflow = jnp.zeros((q,), bool)
+        while True:
+            ts = time.perf_counter()
+            state, i, halted, overflow, d_steps, db, dm = compiled(
+                graph, state, i, halted, overflow)
+            t_enq = time.perf_counter()
+            jax.block_until_ready(state)
+            t_dev = time.perf_counter()
+            step_times.append(t_dev - ts)
+            dispatches += 1
+            steps = int(np.asarray(i))
+            steps_q += np.asarray(d_steps).astype(np.int64)
+            acc(q_bytes, db)
+            acc(q_msgs, dm)
+            overflow_acc |= np.asarray(overflow)
+            overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
+            if check_overflow and overflow_acc[:q_real].any():
+                _raise_query_overflow(overflow_acc[:q_real], steps)
+            if bool(np.asarray(halted).all()) or steps >= max_steps:
+                break
+
+    wall = time.perf_counter() - t0
+    return _batched_result(
+        state, steps, np.asarray(halted), overflow_acc, q_bytes, q_msgs,
+        steps_q, q_real, mode, dispatches, wall, step_times, overhead,
+        check_overflow)
 
 
 def _exec_chunked(compiled, graph, state0, max_steps,

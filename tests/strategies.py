@@ -1,0 +1,61 @@
+"""Shared random-instance generators and hypothesis strategies.
+
+One home for the ad-hoc message/graph generators that used to be copied
+between test modules: ``test_dataplane.py`` and ``test_channels.py``
+draw their random message sets from here, and the hypothesis strategy
+objects give the property tests one consistent parameter space. The
+hypothesis import is optional (PR 1 convention — the suite must collect
+without it): the plain numpy generators always work, and the strategy
+objects exist only when ``HAVE_HYPOTHESIS`` is true.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# canonical small-shard geometry used across the channel-level tests
+W, N_LOC = 4, 16
+
+try:
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - dev env without hypothesis
+    st = None
+    HAVE_HYPOTHESIS = False
+
+
+def random_messages(seed: int, m: int, w: int = W, n_loc: int = N_LOC,
+                    valid_frac: float = 0.7):
+    """Random routed-message set with a pytree payload, as device arrays:
+    ``(dst (w, m) i32, valid (w, m) bool, payload {f: (w, m) f32,
+    i2: (w, m, 2) i32})`` — the data-plane parity tests' instance."""
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.integers(0, w * n_loc, (w, m)).astype(np.int32))
+    valid = jnp.asarray(rng.random((w, m)) < valid_frac)
+    payload = {
+        "f": jnp.asarray(rng.normal(size=(w, m)).astype(np.float32)),
+        "i2": jnp.asarray(rng.integers(0, 99, (w, m, 2)).astype(np.int32)),
+    }
+    return dst, valid, payload
+
+
+def random_scalar_messages(seed: int, m: int, w: int = W, n_loc: int = N_LOC,
+                           valid_frac: float = 0.7):
+    """Random scalar-valued message set as HOST numpy arrays:
+    ``(dst (w, m) i32, valid (w, m) bool, vals (w, m) f32)`` — the
+    channel-vs-bruteforce tests index these directly in their oracles."""
+    rng = np.random.default_rng(seed)
+    dst = rng.integers(0, w * n_loc, (w, m)).astype(np.int32)
+    valid = rng.random((w, m)) < valid_frac
+    vals = rng.normal(size=(w, m)).astype(np.float32)
+    return dst, valid, vals
+
+
+if HAVE_HYPOTHESIS:
+    #: any rng seed
+    seeds = st.integers(0, 2**31 - 1)
+    #: messages per worker, sized for fast channel-level cases
+    message_counts = st.integers(1, 60)
+    #: a probability knob (valid fraction, capacity fraction, ...)
+    fractions = st.floats(0.0, 1.0)

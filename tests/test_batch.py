@@ -1,0 +1,128 @@
+"""The batched query plane: ``Engine.run_batch`` vs Q independent runs.
+
+The acceptance property, swept straight off the registry: for every
+query-parametric program (``repro.algorithms.BATCHED``) in every
+execution mode, a batched run's per-query outputs, step counts and
+per-channel traffic are bit-identical to Q independent ``Engine.run``
+calls — batching reshapes execution, never answers. Plus the pow2
+batch-cap bucketing contract and the run_batch API surface; the
+hypothesis property pins the Q=1 degenerate case.
+"""
+import functools
+
+import numpy as np
+import pytest
+
+import strategies
+from repro.algorithms import BATCHED, REGISTRY
+from repro.graph import pgraph
+from repro.pregel.engine import Engine, bucket_queries
+
+SEED = 0
+W = 4
+NQ = 5  # pads into the cap-8 bucket -> exercises the padded lanes
+CHUNK = 3
+MODES = ("fused", "host", "chunked")
+
+
+@functools.lru_cache(maxsize=None)
+def problem(key):
+    """(graph, pg, inputs, program, queries) for a batched registry key —
+    cached so the mode sweep shares one partition and program instance."""
+    spec = REGISTRY[key]
+    graph = spec.make_graph(spec.test_scale, SEED)
+    pg = pgraph.partition_graph(graph, W, "random", build=spec.build)
+    inputs = spec.inputs(graph, SEED)
+    return graph, pg, inputs, spec.factory(**inputs), spec.queries(
+        graph, SEED, NQ)
+
+
+@functools.lru_cache(maxsize=None)
+def serial_reference(key, mode):
+    """Q independent Engine.run results for a batched key (cached across
+    the assertions that compare against them)."""
+    spec = REGISTRY[key]
+    _, pg, inputs, _, queries = problem(key)
+    eng = Engine(mode=mode, chunk_size=CHUNK)
+    out = []
+    for qv in queries:
+        prog_q = spec.factory(**{**inputs, spec.query_knob: qv})
+        out.append(eng.run(prog_q, pg))
+    return out
+
+
+# the smoke tier keeps one fused entry per channel family (sssp:basic =
+# dynamically routed, pagerank:personal = static plan); everything else
+# is @slow
+SMOKE = {"sssp:basic", "pagerank:personal"}
+
+
+def sweep_params():
+    for key in BATCHED:
+        for mode in MODES:
+            slow = mode != "fused" or key not in SMOKE
+            yield pytest.param(key, mode,
+                               marks=[pytest.mark.slow] if slow else [],
+                               id=f"{key}-{mode}")
+
+
+@pytest.mark.parametrize("key,mode", sweep_params())
+def test_batched_matches_serial_runs(key, mode):
+    _, pg, _, prog, queries = problem(key)
+    res = Engine(mode=mode, chunk_size=CHUNK).run_batch(prog, pg, queries)
+
+    assert res.num_queries == len(queries)
+    assert len(res.outputs) == len(queries) and res.output is res.outputs
+    assert res.steps == int(res.query_steps.max())
+    for qi, serial in enumerate(serial_reference(key, mode)):
+        np.testing.assert_array_equal(
+            np.asarray(res.outputs[qi]), np.asarray(serial.output))
+        assert int(res.query_steps[qi]) == serial.steps
+        assert bool(res.query_halted[qi]) == serial.halted
+        assert res.query_bytes(qi) == serial.bytes_by_channel
+        assert res.query_msgs(qi) == serial.msgs_by_channel
+    # the across-query totals are exactly the per-query sums
+    for name, per_q in res.query_bytes_by_channel.items():
+        assert res.bytes_by_channel[name] == int(per_q.sum())
+    for name, per_q in res.query_msgs_by_channel.items():
+        assert res.msgs_by_channel[name] == int(per_q.sum())
+
+
+def test_bucket_queries_pow2():
+    assert [bucket_queries(q) for q in (1, 2, 3, 4, 5, 20, 27, 32, 33)] == \
+        [1, 2, 4, 4, 8, 32, 32, 32, 64]
+    with pytest.raises(ValueError, match="at least one query"):
+        bucket_queries(0)
+
+
+def test_run_batch_rejects_programs_without_query_axis():
+    from repro.algorithms import get_program
+    spec = REGISTRY["wcc:basic"]
+    g = spec.make_graph(7, SEED)
+    pg = pgraph.partition_graph(g, W, "random", build=spec.build)
+    with pytest.raises(ValueError, match="no query axis"):
+        Engine().run_batch(get_program("wcc:basic"), pg, [0, 1])
+
+
+if strategies.HAVE_HYPOTHESIS:
+    from hypothesis import given, settings, strategies as st
+
+    _Q1_ENGINE = Engine()  # shared so the batched side compiles once
+
+    @pytest.mark.slow
+    @settings(max_examples=6, deadline=None)
+    @given(source=st.integers(0, 255))
+    def test_run_batch_q1_bit_identical_to_run(source):
+        """The degenerate batch: run_batch with Q=1 is Engine.run, bit
+        for bit (output, steps, halt, per-channel traffic)."""
+        _, pg, inputs, prog, _ = problem("sssp:basic")
+        spec = REGISTRY["sssp:basic"]
+        rb = _Q1_ENGINE.run_batch(prog, pg, [source])
+        rs = _Q1_ENGINE.run(
+            spec.factory(**{**inputs, spec.query_knob: source}), pg)
+        np.testing.assert_array_equal(
+            np.asarray(rb.outputs[0]), np.asarray(rs.output))
+        assert rb.steps == rs.steps and rb.halted == rs.halted
+        assert rb.query_bytes(0) == rs.bytes_by_channel
+        assert rb.bytes_by_channel == rs.bytes_by_channel
+        assert rb.msgs_by_channel == rs.msgs_by_channel

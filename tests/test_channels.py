@@ -1,6 +1,7 @@
 """Channel-level correctness: routing, request-respond, combined message,
 aggregator — vs brute-force numpy delivery, including hypothesis property
-tests over random message sets."""
+tests over random message sets (shared instance space:
+tests/strategies.py)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -11,12 +12,13 @@ hypothesis = pytest.importorskip(
 )
 from hypothesis import given, settings, strategies as st
 
+import strategies
+from strategies import N_LOC, W, random_scalar_messages
 from repro.core import aggregator as agg
 from repro.core import message as msg
 from repro.core import request_respond as rr
 from repro.core.channel import ChannelContext
 
-W, N_LOC = 4, 16
 AXIS = "w"
 
 
@@ -41,12 +43,9 @@ def np_deliver(dst, valid, vals):
 
 
 @settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 40))
+@given(seed=strategies.seeds, m=st.integers(1, 40))
 def test_combined_send_matches_bruteforce(seed, m):
-    rng = np.random.default_rng(seed)
-    dst = rng.integers(0, W * N_LOC, (W, m)).astype(np.int32)
-    valid = rng.random((W, m)) < 0.7
-    vals = rng.normal(size=(W, m)).astype(np.float32)
+    dst, valid, vals = random_scalar_messages(seed, m)
 
     def shard(d, v, x):
         ctx = make_ctx()
@@ -67,7 +66,7 @@ def test_combined_send_matches_bruteforce(seed, m):
 
 
 @settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 2**31 - 1))
+@given(seed=strategies.seeds)
 def test_request_respond_matches_gather(seed):
     rng = np.random.default_rng(seed)
     dst = rng.integers(0, W * N_LOC, (W, N_LOC)).astype(np.int32)

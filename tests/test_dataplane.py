@@ -9,6 +9,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+import strategies
+from strategies import N_LOC, W, random_messages
 from repro.core import compose
 from repro.core import message as msg
 from repro.core import routing
@@ -16,7 +18,6 @@ from repro.core.channel import ChannelContext
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
-W, N_LOC = 4, 16
 AXIS = "w"
 MODES = ("host", "fused", "chunked")
 
@@ -50,20 +51,9 @@ def _assert_bit_identical(a, b):
 # ---------------------------------------------------------------------------
 
 
-def _random_messages(seed, m, valid_frac=0.7):
-    rng = np.random.default_rng(seed)
-    dst = jnp.asarray(rng.integers(0, W * N_LOC, (W, m)).astype(np.int32))
-    valid = jnp.asarray(rng.random((W, m)) < valid_frac)
-    payload = {
-        "f": jnp.asarray(rng.normal(size=(W, m)).astype(np.float32)),
-        "i2": jnp.asarray(rng.integers(0, 99, (W, m, 2)).astype(np.int32)),
-    }
-    return dst, valid, payload
-
-
 @pytest.mark.parametrize("seed,m,cap", [(0, 40, 40), (1, 64, 64), (2, 7, 7)])
 def test_bucket_matches_sort_bit_identical(seed, m, cap):
-    dst, valid, payload = _random_messages(seed, m)
+    dst, valid, payload = random_messages(seed, m)
     _assert_bit_identical(
         _route_fields("bucket", dst, valid, payload, cap),
         _route_fields("sort", dst, valid, payload, cap),
@@ -120,29 +110,24 @@ def test_route_impl_env_and_scope(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
-# hypothesis property tests (optional-import, PR 1 convention)
+# hypothesis property tests (optional-import, PR 1 convention; shared
+# instance space from tests/strategies.py)
 # ---------------------------------------------------------------------------
 
-try:
+if strategies.HAVE_HYPOTHESIS:
     from hypothesis import given, settings, strategies as st
-
-    HAVE_HYPOTHESIS = True
-except ImportError:  # pragma: no cover - dev env without hypothesis
-    HAVE_HYPOTHESIS = False
-
-if HAVE_HYPOTHESIS:
 
     @settings(max_examples=25, deadline=None)
     @given(
-        seed=st.integers(0, 2**31 - 1),
-        m=st.integers(1, 60),
+        seed=strategies.seeds,
+        m=strategies.message_counts,
         cap_frac=st.floats(0.1, 1.0),
-        valid_frac=st.floats(0.0, 1.0),
+        valid_frac=strategies.fractions,
     )
     def test_route_parity_property(seed, m, cap_frac, valid_frac):
         """Random messages, random capacity (including overflowing ones):
         every Routed field is bit-identical across the two impls."""
-        dst, valid, payload = _random_messages(seed, m, valid_frac)
+        dst, valid, payload = random_messages(seed, m, valid_frac=valid_frac)
         cap = max(1, int(m * cap_frac))
         _assert_bit_identical(
             _route_fields("bucket", dst, valid, payload, cap),
@@ -150,7 +135,7 @@ if HAVE_HYPOTHESIS:
         )
 
     @settings(max_examples=25, deadline=None)
-    @given(seed=st.integers(0, 2**31 - 1), m=st.integers(1, 400),
+    @given(seed=strategies.seeds, m=st.integers(1, 400),
            b=st.integers(1, 16))
     def test_bucket_ranks_kernel_property(seed, m, b):
         rng = np.random.default_rng(seed)
@@ -178,7 +163,7 @@ def test_bucket_ranks_kernel_matches_ref():
 def test_route_kernel_path_matches_reference():
     """route(impl='bucket') with the Pallas kernel (interpret) ==
     the jnp reference, under vmap like the real runtime."""
-    dst, valid, payload = _random_messages(7, 48)
+    dst, valid, payload = random_messages(7, 48)
 
     def shard(use_kernel):
         def fn(d, v, p):

@@ -105,11 +105,38 @@ def test_repeat_run_hits_cache_and_matches():
     pg = pgraph.partition_graph(g, 4, "random", build=spec.build)
     prog = spec.make(g)
     eng = Engine()
-    r1, r2 = eng.run_many(prog, [pg, pg])
+    results = eng.run_many(prog, [pg, pg])
+    r1, r2 = results
     assert eng.compiles == 1 and eng.cache_hits == 1
+    # run_many exposes the per-item compile-cache outcome
+    assert results.cache_hits == [False, True] and results.hit_count == 1
+    assert eng.stats()["runs"] == 2
     np.testing.assert_array_equal(r1.output, r2.output)
     assert r1.bytes_by_channel == r2.bytes_by_channel
     assert r1.program == r2.program == "wcc:basic"
+
+
+def test_batch_cap_bucketing_shares_compiles():
+    """run_batch keys its compile on the pow2-bucketed batch cap: Q=5 and
+    Q=7 both lower at cap 8 and share one executable, while a Q=3 batch
+    lands in the cap-4 bucket — a batch sweep spanning two buckets pays
+    exactly two compiles, and every batch answers identically."""
+    spec = REGISTRY["sssp:basic"]
+    g = spec.make_graph(8, 0)
+    pg = pgraph.partition_graph(g, 4, "random", build=spec.build)
+    prog = get_program("sssp:basic")
+    sources = [0, 3, 17, 100, 42, 9, 2]
+    eng = Engine()
+    r5 = eng.run_batch(prog, pg, sources[:5])   # cap 8: compile
+    r7 = eng.run_batch(prog, pg, sources)       # cap 8: cache hit
+    r3 = eng.run_batch(prog, pg, sources[:3])   # cap 4: compile
+    assert not r5.cache_hit and r7.cache_hit and not r3.cache_hit
+    assert eng.compiles == 2 and eng.cache_hits == 1
+    for qi in range(3):
+        np.testing.assert_array_equal(
+            np.asarray(r5.outputs[qi]), np.asarray(r7.outputs[qi]))
+        np.testing.assert_array_equal(
+            np.asarray(r5.outputs[qi]), np.asarray(r3.outputs[qi]))
 
 
 def test_different_shape_recompiles():
