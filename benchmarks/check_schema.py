@@ -34,6 +34,9 @@ EXPECTED = {
     "BENCH_query_throughput.json": {
         "scale", "workers", "q", "repeats", "mode", "programs", "headline",
     },
+    "BENCH_routed_batching.json": {
+        "scale", "workers", "q", "repeats", "mode", "programs", "headline",
+    },
 }
 
 # Required keys inside nested blocks (artifact basename -> path -> keys).
@@ -44,6 +47,12 @@ NESTED = {
     "BENCH_query_throughput.json": {
         "headline": {"program", "scale", "q", "speedup", "target",
                      "queries_per_s_batched", "queries_per_s_serial",
+                     "meets_target"},
+    },
+    "BENCH_routed_batching.json": {
+        "headline": {"program", "scale", "q", "speedup_union",
+                     "speedup_lane", "union_vs_lane", "target",
+                     "queries_per_s_union", "queries_per_s_serial",
                      "meets_target"},
     },
 }

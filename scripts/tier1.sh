@@ -45,4 +45,11 @@ python -m benchmarks.query_throughput --scale 10 --queries 4 --repeats 1 \
   --keys pagerank:personal,sssp:prop \
   --out "$smoke_dir/BENCH_query_throughput.json"
 python -m benchmarks.check_schema "$smoke_dir/BENCH_query_throughput.json"
+
+echo "== routed-channel batching (smoke) =="
+python -m repro bench-batch --scale 10 --queries 4 --workers 4 \
+  --channel-class routed
+python -m benchmarks.routed_batching --scale 10 --queries 4 --repeats 1 \
+  --out "$smoke_dir/BENCH_routed_batching.json"
+python -m benchmarks.check_schema "$smoke_dir/BENCH_routed_batching.json"
 echo "tier1: all stages pass"

@@ -143,7 +143,8 @@ def cmd_bench(args) -> int:
 def cmd_bench_batch(args) -> int:
     import numpy as np
 
-    keys = args.keys.split(",") if args.keys else list(BATCHED)
+    named = args.programs or args.keys
+    keys = named.split(",") if named else list(BATCHED)
     q = args.queries
     print(f"== bench-batch (scale {args.scale}, W={args.workers}, Q={q}, "
           f"mode {args.mode}) ==")
@@ -153,9 +154,13 @@ def cmd_bench_batch(args) -> int:
         if spec.make_queries is None:
             print(f"  {spec.key:22s} (no query axis — skipped)")
             continue
+        if args.channel_class != "all" \
+                and spec.channel_class != args.channel_class:
+            continue
         graph, pg, inputs, prog = _prepare(spec, args)
         queries = spec.queries(graph, args.seed, q)
-        eng = Engine(mode=args.mode, chunk_size=args.chunk_size)
+        eng = Engine(mode=args.mode, chunk_size=args.chunk_size,
+                     route_batch=args.route_batch)
         batched = lambda: eng.run_batch(prog, pg, queries,
                                         max_steps=args.max_steps)
         one = lambda s: eng.run_batch(prog, pg, [s],
@@ -176,20 +181,37 @@ def cmd_bench_batch(args) -> int:
             one(s)
         t_serial = time.perf_counter() - t0
         row = {"program": spec.key, "q": len(queries),
+               "channel_class": spec.channel_class,
+               "route_batch": eng.route_batch,
                "supersteps": res_b.steps,
                "queries_per_s_serial": len(queries) / t_serial,
                "queries_per_s_batched": len(queries) / t_batched,
                "speedup": t_serial / t_batched,
                "bytes": res_b.total_bytes}
         rows.append(row)
-        print(f"  {spec.key:22s} steps {res_b.steps:4d}  "
+        print(f"  {spec.key:22s} [{spec.channel_class:6s}] "
+              f"steps {res_b.steps:4d}  "
               f"serial {row['queries_per_s_serial']:8.1f} q/s  "
               f"batched {row['queries_per_s_batched']:8.1f} q/s  "
               f"speedup {row['speedup']:6.2f}x  [outputs bit-identical]")
+    # speedup by channel class: static-plan channels batch through the
+    # query vmap alone; routed channels additionally share the
+    # union-frontier route pass (route_batch="union")
+    by_class = {}
+    for row in rows:
+        by_class.setdefault(row["channel_class"], []).append(row["speedup"])
+    for cls in sorted(by_class):
+        sp = by_class[cls]
+        geo = float(np.exp(np.mean(np.log(sp))))
+        print(f"  -- {cls:6s} ({len(sp)} programs): "
+              f"geomean speedup {geo:6.2f}x  "
+              f"(min {min(sp):.2f}x, max {max(sp):.2f}x)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"scale": args.scale, "workers": args.workers,
-                       "q": q, "mode": args.mode, "rows": rows}, f, indent=2)
+                       "q": q, "mode": args.mode,
+                       "route_batch": args.route_batch or "union",
+                       "rows": rows}, f, indent=2)
         print(f"wrote {args.json}")
     return 0
 
@@ -242,9 +264,18 @@ def main(argv=None) -> int:
     p_bb.add_argument("--keys", default=None,
                       help="comma list of batched programs "
                            "(default: every query-parametric program)")
+    p_bb.add_argument("--programs", default=None,
+                      help="alias for --keys (takes precedence)")
     common(p_bb)
     p_bb.add_argument("--mode", default="fused",
                       choices=("host", "fused", "chunked"))
+    p_bb.add_argument("--channel-class", default="all",
+                      choices=("static", "routed", "all"),
+                      help="only bench programs of this data-plane family")
+    p_bb.add_argument("--route-batch", default=None,
+                      choices=("union", "lane"),
+                      help="routed-channel batching strategy "
+                           "(default: union, see REPRO_ROUTE_BATCH)")
     p_bb.add_argument("--queries", type=int, default=16,
                       help="batch size Q")
     p_bb.add_argument("--json", default=None, help="write rows to JSON")

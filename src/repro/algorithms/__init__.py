@@ -60,6 +60,12 @@ class ProgramSpec:
       factory's programs declare ``query_init`` (the spec is *batched*).
     query_knob: the factory knob one query value binds to (e.g.
       ``"source"``) — how a batched query is replayed as a single run.
+    channel_class: the data-plane family the program's per-superstep
+      communication belongs to — ``"static"`` (plan-driven channels:
+      scatter-combine / propagation, fixed wire layout) or ``"routed"``
+      (dynamic bucket-routed channels: Direct/Combined message,
+      RequestRespond — the ones the union-frontier batching shares one
+      route pass across under ``route_batch="union"``).
     test_scale: graph scale the test sweep / CLI default to.
     """
 
@@ -74,6 +80,7 @@ class ProgramSpec:
     legacy: Optional[Callable] = None
     make_queries: Optional[Callable] = None
     query_knob: Optional[str] = None
+    channel_class: str = "static"
     test_scale: int = 8
 
     def inputs(self, graph: gen.EdgeList, seed: int = 0) -> Dict[str, Any]:
@@ -133,6 +140,13 @@ def _random_sources(graph, seed, q):
     rng = np.random.default_rng(33 + seed)
     return rng.choice(graph.n, size=min(q, graph.n),
                       replace=False).astype(int).tolist()
+
+
+def _forest_queries(graph, seed, q):
+    """Q distinct random forests over the same vertex set — the
+    pointer-jumping query batch (per-label pointer structures)."""
+    return [gen.random_tree_parents(graph.n, seed=100 + seed * 997 + i)
+            for i in range(q)]
 
 
 # --- oracle checks ----------------------------------------------------------
@@ -238,7 +252,8 @@ def _specs():
         make_graph=_directed_rmat,
         make_inputs=lambda graph, seed: {"source": 0},
         check=_check_ppr,
-        make_queries=_random_sources, query_knob="source")
+        make_queries=_random_sources, query_knob="source",
+        channel_class="static")
 
     for v in sssp.VARIANTS:
         add(out, "sssp", v, sssp.program,
@@ -249,7 +264,8 @@ def _specs():
             make_graph=_weighted_rmat,
             make_inputs=lambda graph, seed: {"source": 0},
             check=_check_sssp,
-            make_queries=_random_sources, query_knob="source")
+            make_queries=_random_sources, query_knob="source",
+            channel_class="routed" if v == "basic" else "static")
 
     for v in reachability.VARIANTS:
         add(out, "reach", v, reachability.program,
@@ -260,7 +276,8 @@ def _specs():
             make_graph=_directed_rmat,
             make_inputs=lambda graph, seed: {"source": 0},
             check=_check_reach,
-            make_queries=_random_sources, query_knob="source")
+            make_queries=_random_sources, query_knob="source",
+            channel_class="routed")
 
     for v in msf.VARIANTS:
         add(out, "msf", v, msf.program,
@@ -277,12 +294,18 @@ def _specs():
             make_graph=_scc_rmat, check=_check_scc, test_scale=7)
 
     for v in pointer_jumping.VARIANTS:
+        # the reqresp variant carries a query axis: one query = one
+        # forest over the same vertex set (distinct random trees)
+        batched = v == "reqresp"
         add(out, "pj", v, pointer_jumping.program,
             lambda pg, inputs, mode, cs, _v=v: pointer_jumping.run(
                 pg, inputs["parents"], variant=_v, mode=mode, chunk_size=cs),
             build=(),
             make_graph=_forest_graph, make_inputs=_forest_inputs,
-            check=_check_pj, test_scale=9)
+            check=_check_pj, test_scale=9,
+            make_queries=_forest_queries if batched else None,
+            query_knob="parents" if batched else None,
+            channel_class="routed")
 
     return out
 

@@ -43,6 +43,11 @@ def program(variant: str = "reqresp", *, parents: np.ndarray,
     def init(pg):
         return {"P": parents_to_local(pg, parents)}
 
+    def query_init(pg, parents_q):
+        # one query = one forest over the same vertex set (e.g. the
+        # per-label pointer structures of a multi-label contraction)
+        return {"P": parents_to_local(pg, parents_q)}
+
     def step(ctx, gs, state, step_idx):
         p = state["P"]
         if variant == "reqresp":
@@ -61,6 +66,7 @@ def program(variant: str = "reqresp", *, parents: np.ndarray,
 
     return VertexProgram(
         name=f"pj:{variant}", init=init, step=step, extract=extract,
+        query_init=query_init if variant == "reqresp" else None,
         max_steps=max_steps, meta={"algorithm": "pj", "variant": variant},
     )
 

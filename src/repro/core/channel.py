@@ -114,6 +114,14 @@ class ChannelContext:
     # record — the runtime uses it to reject declared-but-never-traced
     # channels without a dedicated dry trace)
     touched: set = dataclasses.field(default_factory=set)
+    # Batched query plane (repro.pregel.runtime, num_queries=Q). The step
+    # function runs once per query lane under an inner vmap; these are the
+    # per-lane scalars the routed channels use to escape that vmap and
+    # share one union-frontier route pass across lanes (see
+    # ``repro.core.routing.route_union``). All None on unbatched compiles.
+    query_index: jax.Array = None   # () int32 lane id — batched over Q
+    query_live: jax.Array = None    # () bool — lane's pre-step halt vote
+    num_queries: int = None
 
     def __post_init__(self):
         if self.registry is not None:
@@ -126,6 +134,11 @@ class ChannelContext:
 
     def me(self):
         return jax.lax.axis_index(self.axis)
+
+    @property
+    def batched(self) -> bool:
+        """True when this step runs under the batched query plane."""
+        return self.query_index is not None
 
     def add_traffic(self, name: str, nbytes, nmsgs):
         self.touched.add(name)

@@ -44,6 +44,7 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
+from jax.custom_batching import custom_vmap
 
 from repro.core.channel import TRAFFIC_DTYPE
 from repro.kernels import ops as kops
@@ -77,6 +78,58 @@ def impl_scope(impl: Optional[str]):
         yield
     finally:
         _IMPL_OVERRIDE = prev
+
+
+# --------------------------------------------------------------------------
+# batched (query-lane) routing configuration — mirrors the impl surface
+# --------------------------------------------------------------------------
+
+BATCH_IMPLS = ("union", "lane")
+
+_BATCH_OVERRIDE: Optional[str] = None
+
+
+def resolve_batch(batch: Optional[str] = None) -> str:
+    """The batched-routing strategy for a call site: explicit argument,
+    else the :func:`batch_scope` override, else ``REPRO_ROUTE_BATCH``,
+    else ``"union"``.
+
+      - ``"union"`` (default): per superstep, the routed channels compute
+        the union frontier across the Q query lanes and run ONE
+        bucket-route pass over it; payloads travel as a ``(slots, Q)``
+        lane matrix with per-lane membership masks.
+      - ``"lane"``: the PR-5 behavior — the query vmap batches the
+        serial route, i.e. Q independent route passes per superstep.
+        Kept as the measured baseline (``benchmarks/routed_batching.py``).
+    """
+    batch = batch or _BATCH_OVERRIDE or os.environ.get("REPRO_ROUTE_BATCH")
+    batch = batch or "union"
+    if batch not in BATCH_IMPLS:
+        raise ValueError(
+            f"unknown route batch strategy {batch!r} (one of {BATCH_IMPLS})")
+    return batch
+
+
+@contextlib.contextmanager
+def batch_scope(batch: Optional[str]):
+    """Pin the batched-routing strategy for every routed channel under
+    the scope (trace-time: wrap the compile, not the execution) — how
+    ``Engine(route_batch=...)`` threads the knob through a compile."""
+    global _BATCH_OVERRIDE
+    prev = _BATCH_OVERRIDE
+    _BATCH_OVERRIDE = None if batch is None else resolve_batch(batch)
+    try:
+        yield
+    finally:
+        _BATCH_OVERRIDE = prev
+
+
+def lane_live(ctx):
+    """Per-lane liveness scalar for batched channel units: the runtime's
+    pre-step halt vote, or constant True when none was provided (e.g. a
+    hand-built test context)."""
+    live = getattr(ctx, "query_live", None)
+    return jnp.asarray(True) if live is None else jnp.asarray(live, bool)
 
 
 @dataclasses.dataclass
@@ -176,6 +229,192 @@ def route(
         sent_count=sent_count,
         overflow=overflow,
     )
+
+
+# --------------------------------------------------------------------------
+# union-frontier batched routing (the query-aware data plane)
+#
+# Under the batched query plane the step function is vmapped over Q query
+# lanes INSIDE the worker mapping, so a naive routed channel runs Q
+# independent bucket-route passes over mostly-overlapping frontiers. The
+# units below escape that vmap with ``jax.custom_batching.custom_vmap``:
+# the batching rule sees all Q lanes materialized at once (batch at axis
+# 0) while still under the worker trace, computes the UNION frontier,
+# runs ONE bucket-route pass over it, and exchanges payloads as a
+# ``(slots, Q)`` lane matrix with per-lane membership masks — one
+# ``all_to_all`` per leaf instead of Q.
+#
+# Exactness contract: per-lane deliveries, ``sent_count`` and traffic are
+# bit-identical to Q independent serial routes whenever the union pass
+# does not overflow (union arrival ranks dominate per-lane ranks, so
+# batched ``overflow`` is a conservative superset of serial overflow —
+# never a silent drop). ``slot`` keeps its positional-reply semantics but
+# holds *shared* wire slots, which differ from a lane's private ranks;
+# only ``reply()`` consumes it and the round trip is order-exact.
+# --------------------------------------------------------------------------
+
+
+def union_dedup(dst_l, valid_l, n_total: int, u_cap: int):
+    """:func:`dedup_dense` across Q lanes at once: the compact ascending
+    unique list over the UNION of every lane's valid destinations.
+
+    Args:
+      dst_l: (Q, M) int32 global destination ids per lane.
+      valid_l: (Q, M) bool.
+      n_total: static id-space bound (W * n_loc).
+      u_cap: compact-list capacity — ``min(Q * M, n_total)`` never
+        truncates (the union cannot exceed either bound).
+    Returns:
+      (u_dst (u_cap,) ascending BIG-padded, pos (N,) compact index per id).
+    """
+    key_l = jnp.where(valid_l, dst_l.astype(jnp.int32), n_total)
+    got = (
+        jnp.zeros((n_total,), jnp.int32)
+        .at[key_l.reshape(-1)]
+        .add(1, mode="drop")
+        > 0
+    )
+    pos = jnp.cumsum(got.astype(jnp.int32)) - 1
+    u_dst = (
+        jnp.full((u_cap + 1,), BIG, jnp.int32)
+        .at[jnp.where(got, pos, u_cap)]
+        .set(jnp.arange(n_total, dtype=jnp.int32), mode="drop")[:u_cap]
+    )
+    return u_dst, pos
+
+
+def union_ranks(key, lanes, w: int, impl: Optional[str] = None,
+                use_kernel: Optional[bool] = None):
+    """Shared ranks + per-lane per-bucket counts over a union key list —
+    the one route pass of the batched data plane. Same (rank, count)
+    contract as the serial pass; ``lane_counts`` (W, Q) attributes wire
+    occupancy to each lane for per-query traffic accounting."""
+    if resolve_impl(impl) == "bucket":
+        return kops.bucket_ranks_lanes(key, lanes, w, use_kernel=use_kernel)
+    rank, count = _slots_sort(key, w)
+    lane_counts = jax.ops.segment_sum(
+        jnp.asarray(lanes, jnp.int32), key, w + 1)[:w]
+    return rank, count, lane_counts
+
+
+def route_union(
+    ctx,
+    dst,
+    valid,
+    payload,
+    capacity: int,
+    *,
+    exchange_payload=True,
+    impl: Optional[str] = None,
+    use_kernel: Optional[bool] = None,
+):
+    """Batched :func:`route`: one shared bucket-route pass over the union
+    frontier of all Q query lanes (see the section comment above).
+
+    Call it exactly like ``route`` from inside a batched step (per-lane
+    (M,) views); it returns the per-lane ``Routed`` view of the shared
+    exchange. Positional union slots are only sound when ``dst`` is
+    lane-invariant (graph topology, not query state) — proven via the
+    custom_vmap ``in_batched`` flags; a lane-varying ``dst`` falls back
+    to Q per-lane route passes inside the rule (same results, no
+    sharing). Outside the batched query plane this IS ``route``.
+    """
+    if not getattr(ctx, "batched", False):
+        return route(ctx, dst, valid, payload, capacity,
+                     exchange_payload=exchange_payload, impl=impl,
+                     use_kernel=use_kernel)
+    impl = resolve_impl(impl)
+    W, n_loc, ax = ctx.num_workers, ctx.n_loc, ctx.axis
+    c = capacity
+    leaves, treedef = jax.tree_util.tree_flatten(payload)
+
+    def routed_tuple(r):
+        pl_leaves = (jax.tree_util.tree_leaves(r.payload)
+                     if exchange_payload else ())
+        return (r.ids, r.mask, r.slot, r.sent_count, r.overflow, *pl_leaves)
+
+    @custom_vmap
+    def ex(qidx, live, dst, valid, *leaves):
+        # unbatched trace (the runtime always vmaps over Q, so this body
+        # only runs for a hand-called unbatched unit): the serial route
+        r = route(ctx, dst, valid & live, treedef.unflatten(list(leaves)),
+                  c, exchange_payload=exchange_payload, impl=impl,
+                  use_kernel=use_kernel)
+        return routed_tuple(r)
+
+    @ex.def_vmap
+    def _rule(axis_size, in_batched, qidx, live, dst, valid, *leaves):
+        q = axis_size
+        _, lb, db, vb = in_batched[:4]
+        leaf_b = in_batched[4:]
+        live2 = live if lb else jnp.broadcast_to(live, (q,))
+        valid2 = valid if vb else jnp.broadcast_to(valid, (q,) + valid.shape)
+        valid_eff = valid2 & live2[:, None]  # (Q, M)
+        leaves2 = tuple(
+            lf if b else jnp.broadcast_to(lf, (q,) + lf.shape)
+            for lf, b in zip(leaves, leaf_b))
+
+        if db:
+            # dst varies per lane: positional sharing is unsound — run Q
+            # per-lane serial routes (bit-identical, no union win)
+            def one(d, v, lvs):
+                r = route(ctx, d, v, treedef.unflatten(list(lvs)), c,
+                          exchange_payload=exchange_payload, impl=impl,
+                          use_kernel=use_kernel)
+                return routed_tuple(r)
+
+            outs = jax.vmap(one)(dst, valid_eff, leaves2)
+            return outs, tuple(True for _ in outs)
+
+        # ---- one shared pass over the union frontier ----
+        uvalid = jnp.any(valid_eff, axis=0)  # (M,)
+        ids = jnp.where(uvalid, dst.astype(jnp.int32), BIG)
+        owner = jnp.clip(ids // n_loc, 0, W - 1)
+        key = jnp.where(uvalid, owner, W).astype(jnp.int32)
+        lanes = valid_eff.T  # (M, Q)
+        rank, count, lane_counts = union_ranks(
+            key, lanes, W, impl=impl, use_kernel=use_kernel)
+        fits = rank < c
+        packed = uvalid & fits
+        slot = jnp.where(packed, key * c + rank, W * c)  # (M,) shared
+        # per-lane views of the shared pass: overflow is conservative
+        # (union ranks dominate lane ranks); sent counts are exact
+        overflow_l = jnp.any(valid_eff & ~fits[None, :], axis=1)  # (Q,)
+        sent_l = jnp.minimum(lane_counts, c).T  # (Q, W)
+        slot_l = jnp.where(valid_eff & packed[None, :], slot[None, :], W * c)
+
+        def pack(leafT, fill):  # leafT (M, ...) scattered at shared slots
+            shape = (W * c + 1,) + leafT.shape[1:]
+            buf = jnp.full(shape, fill, leafT.dtype)
+            return buf.at[slot].set(leafT, mode="drop")[: W * c]
+
+        send_ids = pack(ids, BIG).reshape(W, c)
+        recv_ids = jax.lax.all_to_all(send_ids, ax, 0, 0, tiled=True)
+        # per-lane wire membership rides as one (slots, Q) lane matrix
+        send_mask = pack(lanes, False).reshape(W, c, q)
+        recv_mask = jax.lax.all_to_all(send_mask, ax, 0, 0, tiled=True)
+        out_mask = jnp.moveaxis(recv_mask, 2, 0)  # (Q, W, c)
+        # a lane's ids view pads slots it did not occupy (= serial view)
+        out_ids = jnp.where(out_mask, recv_ids[None], BIG)
+
+        out = [out_ids, out_mask, slot_l, sent_l, overflow_l]
+        if exchange_payload:
+            for leaf2 in leaves2:  # (Q, M, ...)
+                leafT = jnp.moveaxis(leaf2, 0, 1)  # (M, Q, ...)
+                sel = lanes.reshape(lanes.shape + (1,) * (leafT.ndim - 2))
+                leafT = jnp.where(sel, leafT, 0)  # serial pack fill
+                buf = pack(leafT, 0).reshape((W, c, q) + leafT.shape[2:])
+                recv = jax.lax.all_to_all(buf, ax, 0, 0, tiled=True)
+                out.append(jnp.moveaxis(recv, 2, 0))  # (Q, W, c, ...)
+        return tuple(out), tuple(True for _ in out)
+
+    outs = ex(ctx.query_index, lane_live(ctx),
+              jnp.asarray(dst, jnp.int32), valid, *leaves)
+    ids, mask, slot, sent_count, overflow = outs[:5]
+    recv_payload = (treedef.unflatten(list(outs[5:]))
+                    if exchange_payload else None)
+    return Routed(ids=ids, mask=mask, payload=recv_payload, slot=slot,
+                  sent_count=sent_count, overflow=overflow)
 
 
 def reply(ctx, routed: Routed, resp):

@@ -52,6 +52,38 @@ def _kernel(key_ref, rank_ref, counts_ref, *, num_buckets):
     counts_ref[0, :] = base + onehot.sum(axis=0)
 
 
+def _kernel_lanes(key_ref, lane_ref, rank_ref, counts_ref, lane_counts_ref,
+                  *, num_buckets):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        lane_counts_ref[...] = jnp.zeros_like(lane_counts_ref)
+
+    keys = key_ref[:, 0]
+    cols = jax.lax.broadcasted_iota(
+        jnp.int32, (keys.shape[0], num_buckets + 1), 1
+    )
+    onehot = (keys[:, None] == cols).astype(jnp.int32)  # (BM, B+1)
+    base = counts_ref[0, :]
+    within = jnp.cumsum(onehot, axis=0) - 1
+    rank = jnp.sum(onehot * (within + base[None, :]), axis=1)
+    rank_ref[:, 0] = rank
+    counts_ref[0, :] = base + onehot.sum(axis=0)
+    # per-lane per-bucket histogram delta for this chunk: one
+    # (B+1, BM) x (BM, Q) contraction — an MXU matmul on TPU. float32
+    # accumulation is exact here (counts are bounded by M << 2^24).
+    lanes = lane_ref[...]  # (BM, Q) membership
+    delta = jax.lax.dot_general(
+        onehot.astype(jnp.float32),
+        lanes.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    lane_counts_ref[...] = lane_counts_ref[...] + delta.astype(jnp.int32)
+
+
 def bucket_ranks_pallas(
     keys,
     *,
@@ -91,3 +123,53 @@ def bucket_ranks_pallas(
         interpret=interpret,
     )(jnp.asarray(keys, jnp.int32)[:, None])
     return rank[:, 0], counts[0]
+
+
+def bucket_ranks_lanes_pallas(
+    keys,
+    lanes,
+    *,
+    num_buckets: int,
+    block_msgs: int = 512,
+    interpret: bool = True,
+):
+    """Q-aware bucket ranking: the same sequential counting sweep as
+    :func:`bucket_ranks_pallas`, fused with the per-lane per-bucket
+    membership histogram the batched (union-frontier) data plane charges
+    traffic from — one pass over the union key list instead of Q.
+
+    Args:
+      keys: (M_pad,) int32 bucket per union entry in ``[0, num_buckets]``
+        (``num_buckets`` = invalid sentinel); M_pad a ``block_msgs``
+        multiple.
+      lanes: (M_pad, Q) int32 lane membership (0/1); padded tail rows
+        must be all-zero.
+    Returns:
+      (rank (M_pad,), counts (B + 1,), lane_counts (B + 1, Q)).
+    """
+    m = keys.shape[0]
+    q = lanes.shape[1]
+    assert m % block_msgs == 0, (m, block_msgs)
+    assert lanes.shape[0] == m, (lanes.shape, m)
+    grid = (m // block_msgs,)
+    kernel = functools.partial(_kernel_lanes, num_buckets=num_buckets)
+    rank, counts, lane_counts = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_msgs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_msgs, q), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_msgs, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, num_buckets + 1), lambda i: (0, 0)),
+            pl.BlockSpec((num_buckets + 1, q), lambda i: (0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, num_buckets + 1), jnp.int32),
+            jax.ShapeDtypeStruct((num_buckets + 1, q), jnp.int32),
+        ),
+        interpret=interpret,
+    )(jnp.asarray(keys, jnp.int32)[:, None], jnp.asarray(lanes, jnp.int32))
+    return rank[:, 0], counts[0], lane_counts

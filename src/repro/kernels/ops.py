@@ -261,3 +261,50 @@ def bucket_ranks(
         interpret=resolve_interpret(interpret),
     )
     return rank[:m], counts[:num_buckets]
+
+
+def bucket_ranks_lanes(
+    keys,
+    lanes,
+    num_buckets: int,
+    *,
+    use_kernel: Optional[bool] = None,
+    interpret: Optional[bool] = None,
+    block_msgs: int = 512,
+):
+    """Q-aware bucket ranking for the union-frontier batched data plane:
+    shared stable ranks over the union key list plus the per-lane
+    per-bucket membership histogram, in one sweep (the Q-aware variant of
+    :func:`bucket_ranks` — see ``repro.core.routing.route_union``).
+
+    Args:
+      keys: (M,) int32 bucket per union entry in ``[0, num_buckets]``
+        (``num_buckets`` = invalid sentinel).
+      lanes: (M, Q) lane membership (bool/0-1) — all-False rows for
+        invalid entries.
+      num_buckets: static bucket count (the worker count W).
+    Returns:
+      (rank (M,) int32, counts (num_buckets,) int32,
+       lane_counts (num_buckets, Q) int32).
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    lanes = jnp.asarray(lanes, jnp.int32)
+    if not resolve_use_kernel(use_kernel):
+        return kref.bucket_ranks_lanes_ref(keys, lanes, num_buckets)
+    m, q = lanes.shape
+    m_pad = _round_up(max(m, 1), block_msgs)
+    if m_pad != m:
+        keys = jnp.concatenate(
+            [keys, jnp.full((m_pad - m,), num_buckets, jnp.int32)]
+        )
+        lanes = jnp.concatenate(
+            [lanes, jnp.zeros((m_pad - m, q), jnp.int32)]
+        )
+    rank, counts, lane_counts = kbucket.bucket_ranks_lanes_pallas(
+        keys,
+        lanes,
+        num_buckets=num_buckets,
+        block_msgs=block_msgs,
+        interpret=resolve_interpret(interpret),
+    )
+    return rank[:m], counts[:num_buckets], lane_counts[:num_buckets]

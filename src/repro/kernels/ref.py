@@ -1,6 +1,7 @@
 """Pure-jnp oracles for the Pallas kernels in this package."""
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import combiners as cb
@@ -50,6 +51,31 @@ def bucket_ranks_ref(keys, num_buckets):
         jnp.cumsum(onehot, axis=0) - 1, keys[:, None], axis=1
     )[:, 0]
     return rank, onehot[:, :num_buckets].sum(axis=0)
+
+
+def bucket_ranks_lanes_ref(keys, lanes, num_buckets):
+    """Q-aware oracle for the union-frontier bucket route: the *shared*
+    stable ranks/occupancy over the union key list (identical to
+    :func:`bucket_ranks_ref`) plus the per-lane per-bucket membership
+    histogram — the quantity the batched data plane needs to attribute
+    wire traffic to each query lane without a second pass.
+
+    Args:
+      keys: (M,) int32 bucket per union entry in ``[0, num_buckets]``
+        (``num_buckets`` = invalid sentinel).
+      lanes: (M, Q) lane membership (bool or 0/1 int) — lane q enqueued
+        the entry. Membership of an invalid entry must be all-False.
+      num_buckets: static int B (the worker count W).
+    Returns:
+      (rank (M,), counts (B,), lane_counts (B, Q)) — ``lane_counts[b, q]``
+      is how many of lane q's entries landed in bucket b.
+    """
+    keys = jnp.asarray(keys, jnp.int32)
+    rank, counts = bucket_ranks_ref(keys, num_buckets)
+    lane_counts = jax.ops.segment_sum(
+        jnp.asarray(lanes, jnp.int32), keys, num_buckets + 1
+    )[:num_buckets]
+    return rank, counts, lane_counts
 
 
 def gather_segment_combine_ref(src_vals, edge_src, seg_ids, num_segments, combiner):

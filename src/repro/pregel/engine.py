@@ -64,7 +64,8 @@ class Engine:
                  mesh: Optional[jax.sharding.Mesh] = None,
                  mode: Optional[str] = None, chunk_size: int = 64,
                  use_kernel: Optional[bool] = None,
-                 route_impl: Optional[str] = None):
+                 route_impl: Optional[str] = None,
+                 route_batch: Optional[str] = None):
         if mode is None:
             mode = "fused"
         if mode not in ("fused", "chunked", "host"):
@@ -79,6 +80,9 @@ class Engine:
         # loop are different executables.
         self.use_kernel = kops.resolve_use_kernel(use_kernel)
         self.route_impl = routing.resolve_impl(route_impl)
+        # how routed channels batch the query axis in run_batch compiles
+        # ("union" = shared union-frontier route pass, "lane" = per-lane)
+        self.route_batch = routing.resolve_batch(route_batch)
         self._cache: Dict[Tuple, runtime.CompiledSupersteps] = {}
         self.compiles = 0
         self.cache_hits = 0
@@ -103,6 +107,7 @@ class Engine:
         new config knob lands in both keys or neither): return
         ``(exe, hit)`` and bump the session counters."""
         key = (prog, ms, co, self.use_kernel, self.route_impl,
+               self.route_batch,
                runtime.graph_signature(pg),
                runtime.state_signature(state0)) + key_extra
         exe = self._cache.get(key)
@@ -115,7 +120,7 @@ class Engine:
                 mesh=self.mesh, check_overflow=co, mode=self.mode,
                 chunk_size=self.chunk_size, channels=prog.channels,
                 use_kernel=self.use_kernel, route_impl=self.route_impl,
-                num_queries=num_queries,
+                route_batch=self.route_batch, num_queries=num_queries,
             )
             self._cache[key] = exe
             self.compiles += 1
@@ -233,11 +238,12 @@ def run_program(prog: VertexProgram, pg: PartitionedGraph, *,
                 chunk_size: int = 64, max_steps: Optional[int] = None,
                 check_overflow: Optional[bool] = None,
                 use_kernel: Optional[bool] = None,
-                route_impl: Optional[str] = None) -> runtime.RunResult:
+                route_impl: Optional[str] = None,
+                route_batch: Optional[str] = None) -> runtime.RunResult:
     """One-shot convenience: a throwaway single-run Engine. The legacy
     per-algorithm ``run()`` wrappers delegate here."""
     eng = Engine(backend=backend, mesh=mesh, mode=mode,
                  chunk_size=chunk_size, use_kernel=use_kernel,
-                 route_impl=route_impl)
+                 route_impl=route_impl, route_batch=route_batch)
     return eng.run(prog, pg, max_steps=max_steps,
                    check_overflow=check_overflow)

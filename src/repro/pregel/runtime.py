@@ -102,9 +102,11 @@ class RunResult:
     engine_cache_hits: int = 0
     # Data-plane configuration the loop was compiled with (resolved —
     # benchmarks report exactly which path ran): Pallas kernels vs the
-    # jnp reference, and the routed-exchange implementation.
+    # jnp reference, the routed-exchange implementation, and (batched
+    # runs) the query-batching strategy for routed channels.
     use_kernel: bool = False
     route_impl: str = ""
+    route_batch: str = ""
     # Batched-query metadata (num_queries > 0 iff the loop carried a
     # query axis). The per-query arrays are host numpy, length Q;
     # bytes_by_channel/msgs_by_channel hold the across-query totals.
@@ -233,6 +235,7 @@ class CompiledSupersteps:
     # resolved data-plane configuration baked into the compiled loop
     use_kernel: bool = False
     route_impl: str = "bucket"
+    route_batch: str = "union"
     # query-axis width the loop was lowered with (None = unbatched)
     num_queries: Optional[int] = None
 
@@ -262,6 +265,7 @@ class CompiledSupersteps:
                                 self.check_overflow)
         res.use_kernel = self.use_kernel
         res.route_impl = self.route_impl
+        res.route_batch = self.route_batch if self.num_queries else ""
         return res
 
 
@@ -279,6 +283,7 @@ def compile_supersteps(
     channels: Optional[Any] = None,
     use_kernel: Optional[bool] = None,
     route_impl: Optional[str] = None,
+    route_batch: Optional[str] = None,
     num_queries: Optional[int] = None,
 ) -> CompiledSupersteps:
     """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
@@ -294,6 +299,13 @@ def compile_supersteps(
     ``(W, Q, n_loc, ...)``, and halting/step counts/traffic are tracked
     per query (see the module docstring). The step function itself is
     unchanged — it still sees one query's ``(n_loc, ...)`` shard.
+
+    route_batch selects how *routed* channels handle the query axis in a
+    batched compile: ``"union"`` (default) shares ONE union-frontier
+    bucket-route pass per superstep across all live lanes
+    (``repro.core.routing.route_union``), ``"lane"`` routes each lane
+    independently under the vmap (the pre-union behavior). Ignored when
+    num_queries is None.
     """
     # lower against the scrubbed graph: the compiled treedef must not
     # capture the host-only identity statics, or execute() could only
@@ -308,8 +320,17 @@ def compile_supersteps(
     traced_names: set = set()
 
     def make_shard_step(registry: Optional[ChannelRegistry]):
-        def shard_step(g_shard, state_shard, step_idx):
-            ctx = ChannelContext(axis, W, n_loc, registry=registry)
+        def shard_step(g_shard, state_shard, step_idx, qinfo=None):
+            # qinfo = (lane_index (), lane_live ()) under the query vmap —
+            # the per-lane scalars routed channels use to share one
+            # union-frontier route pass across lanes (route_batch="union")
+            if qinfo is None:
+                ctx = ChannelContext(axis, W, n_loc, registry=registry)
+            else:
+                ctx = ChannelContext(
+                    axis, W, n_loc, registry=registry,
+                    query_index=qinfo[0], query_live=qinfo[1],
+                    num_queries=num_queries)
             out = step_fn(ctx, g_shard, state_shard, step_idx)
             if len(out) == 3:
                 new_state, halt, overflow = out
@@ -338,10 +359,23 @@ def compile_supersteps(
         if num_queries is not None:
             # the query axis rides INSIDE the worker mapping: each worker
             # advances all Q query instances of its shard; the axis-name
-            # collectives inside the step batch transparently over Q
-            shard_step = jax.vmap(shard_step, in_axes=(None, 0, None))
+            # collectives inside the step batch transparently over Q. The
+            # per-lane (index, live) scalars are batched alongside so the
+            # union-frontier routed channels always see a Q-batched
+            # operand (their custom_vmap rule fires on the query trace).
+            q_inner = jax.vmap(shard_step, in_axes=(None, 0, None, 0))
+
+            def shard_step_q(g_shard, state_shard, step_idx, live):
+                qinfo = (jnp.arange(num_queries, dtype=jnp.int32),
+                         jnp.asarray(live, bool))
+                return q_inner(g_shard, state_shard, step_idx, qinfo)
+
+            shard_step = shard_step_q
+            worker_axes = (0, 0, None, None)
+        else:
+            worker_axes = (0, 0, None)
         if backend == "vmap":
-            return jax.vmap(shard_step, in_axes=(0, 0, None), axis_name=axis)
+            return jax.vmap(shard_step, in_axes=worker_axes, axis_name=axis)
         if backend == "shard_map":
             assert mesh is not None
             if mesh.shape[axis] != W:
@@ -351,24 +385,28 @@ def compile_supersteps(
                     f"{mesh.shape[axis]}")
             P = jax.sharding.PartitionSpec
 
-            def device_step(g_shard, state_shard, step_idx):
+            def device_step(g_shard, state_shard, step_idx, *rest):
                 # shard_map keeps the sharded axis as a leading size-1
                 # dim; the step code (like vmap's) works on the bare
-                # shard — peel it off and put it back on the state
+                # shard — peel it off and put it back on the state.
+                # ``rest`` is the replicated (Q,) liveness vector on
+                # batched compiles, empty otherwise.
                 one = lambda x: x[0]
                 new_state, halt, ovf, nb, nm = shard_step(
                     jax.tree_util.tree_map(one, g_shard),
                     jax.tree_util.tree_map(one, state_shard),
                     step_idx,
+                    *rest,
                 )
                 new_state = jax.tree_util.tree_map(
                     lambda x: x[None], new_state)
                 return new_state, halt, ovf, nb, nm
 
+            extra = (P(),) if num_queries is not None else ()
             return _shard_map(
                 device_step,
                 mesh=mesh,
-                in_specs=(P(axis), P(axis), P()),
+                in_specs=(P(axis), P(axis), P()) + extra,
                 out_specs=(P(axis), P(), P(), P(), P()),
             )
         raise ValueError(backend)
@@ -382,10 +420,12 @@ def compile_supersteps(
     registry = None
     resolved_kernel = kops.resolve_use_kernel(use_kernel)
     resolved_route = routing.resolve_impl(route_impl)
+    resolved_batch = routing.resolve_batch(route_batch)
     # the data-plane choice is baked in at trace time: every channel call
     # that did not pass an explicit argument resolves through these scopes
     with kops.use_kernel_scope(resolved_kernel), \
-            routing.impl_scope(resolved_route):
+            routing.impl_scope(resolved_route), \
+            routing.batch_scope(resolved_batch):
         if channels is not None:
             from repro.core import compose
 
@@ -399,9 +439,10 @@ def compile_supersteps(
             registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
         elif mode in ("fused", "chunked"):
             probe = map_shards(make_shard_step(None))
-            out_struct = jax.eval_shape(
-                probe, graph, state0, jnp.asarray(0, jnp.int32)
-            )
+            probe_args = (graph, state0, jnp.asarray(0, jnp.int32))
+            if num_queries is not None:
+                probe_args += (jnp.ones((num_queries,), bool),)
+            out_struct = jax.eval_shape(probe, *probe_args)
             _, _, _, bytes_struct, _ = out_struct
             registry = ChannelRegistry.from_stats_structure(bytes_struct)
 
@@ -467,6 +508,7 @@ def compile_supersteps(
         _fn=fn,
         use_kernel=resolved_kernel,
         route_impl=resolved_route,
+        route_batch=resolved_batch,
         num_queries=num_queries,
     )
 
@@ -485,6 +527,7 @@ def run_supersteps(
     channels: Optional[Any] = None,
     use_kernel: Optional[bool] = None,
     route_impl: Optional[str] = None,
+    route_batch: Optional[str] = None,
 ) -> RunResult:
     """Run `step_fn(ctx, graph_shard, state_shard, step)` to halt.
 
@@ -508,7 +551,7 @@ def run_supersteps(
         graph, step_fn, state0, max_steps=max_steps, backend=backend,
         mesh=mesh, axis=axis, check_overflow=check_overflow, mode=mode,
         chunk_size=chunk_size, channels=channels, use_kernel=use_kernel,
-        route_impl=route_impl,
+        route_impl=route_impl, route_batch=route_batch,
     )
     res = exe.execute(graph, state0)
     res.compile_time_s = exe.compile_time_s
@@ -719,8 +762,8 @@ def _make_batched_step(mapped, q: int):
     directly, fused/chunked call it from their loop bodies."""
 
     def bstep(graph, state, i, halted):
-        new_state, halt, ovf, db, dm = mapped(graph, state, i)
         live = ~halted
+        new_state, halt, ovf, db, dm = mapped(graph, state, i, live)
         new_state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(_qmask(live, n), n, o), new_state, state)
         # stat leaves have the query axis last ((W, Q) / (Q,)) — the

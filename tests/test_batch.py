@@ -88,6 +88,49 @@ def test_batched_matches_serial_runs(key, mode):
         assert res.msgs_by_channel[name] == int(per_q.sum())
 
 
+def test_route_batch_lane_matches_union_and_cache_key():
+    """The routed-channel batching knob: ``route_batch="lane"`` (Q
+    per-lane route passes) and ``"union"`` (one shared union-frontier
+    pass) produce bit-identical per-query results on a routed program,
+    each strategy is its own compile-cache entry, and the RunResult is
+    stamped with the strategy that produced it."""
+    _, pg, _, prog, queries = problem("sssp:basic")
+    eng_u = Engine(mode="fused", route_batch="union")
+    eng_l = Engine(mode="fused", route_batch="lane")
+    ru = eng_u.run_batch(prog, pg, queries)
+    rl = eng_l.run_batch(prog, pg, queries)
+    assert ru.route_batch == "union" and rl.route_batch == "lane"
+    assert eng_u.compiles == 1 and eng_l.compiles == 1
+    for qi in range(len(queries)):
+        np.testing.assert_array_equal(
+            np.asarray(ru.outputs[qi]), np.asarray(rl.outputs[qi]))
+        assert ru.query_bytes(qi) == rl.query_bytes(qi)
+        assert ru.query_msgs(qi) == rl.query_msgs(qi)
+    np.testing.assert_array_equal(np.asarray(ru.query_steps),
+                                  np.asarray(rl.query_steps))
+
+
+@pytest.mark.parametrize("route_batch", ("union", "lane"))
+def test_pad_lanes_never_reach_the_wire(route_batch):
+    """Regression (pad/halt traffic fix): NQ=5 pads into the cap-8
+    bucket, so three pad lanes (replays of query 0) and every
+    post-convergence halted lane ride along each superstep. Neither may
+    occupy shared wire slots or be charged: the run totals are exactly
+    the per-real-query sums, on both batching strategies."""
+    _, pg, _, prog, queries = problem("sssp:basic")
+    res = Engine(mode="fused", route_batch=route_batch).run_batch(
+        prog, pg, queries)
+    assert res.num_queries == NQ
+    for name, tot in res.bytes_by_channel.items():
+        assert tot == sum(res.query_bytes(q)[name] for q in range(NQ)), \
+            (route_batch, name)
+    for name, tot in res.msgs_by_channel.items():
+        assert tot == sum(res.query_msgs(q)[name] for q in range(NQ)), \
+            (route_batch, name)
+    assert res.total_bytes == sum(
+        sum(res.query_bytes(q).values()) for q in range(NQ))
+
+
 def test_bucket_queries_pow2():
     assert [bucket_queries(q) for q in (1, 2, 3, 4, 5, 20, 27, 32, 33)] == \
         [1, 2, 4, 4, 8, 32, 32, 32, 64]

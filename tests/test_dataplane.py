@@ -1,9 +1,11 @@
 """The kernelized sparse data plane: one-pass bucket routing vs the
 sort-route baseline (bit-identical ``Routed`` contract), the Pallas
 bucket-rank kernel vs its jnp oracle, wire-message traffic accounting
-(post-dedup, capacity-clamped), the density-adaptive exchange, and the
-``use_kernel``/``route_impl`` configuration surface end to end
-(env var -> Engine knob -> RunResult)."""
+(post-dedup, capacity-clamped), the density-adaptive exchange, the
+batched union-frontier route pass vs Q per-lane passes (per-lane
+``Routed`` contract, halted-lane masking, lane-varying-dst fallback),
+and the ``use_kernel``/``route_impl``/``route_batch`` configuration
+surface end to end (env var -> Engine knob -> RunResult)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -109,6 +111,204 @@ def test_route_impl_env_and_scope(monkeypatch):
         routing.resolve_impl("warp")
 
 
+def test_route_batch_env_and_scope(monkeypatch):
+    monkeypatch.delenv("REPRO_ROUTE_BATCH", raising=False)
+    assert routing.resolve_batch() == "union"
+    monkeypatch.setenv("REPRO_ROUTE_BATCH", "lane")
+    assert routing.resolve_batch() == "lane"
+    with routing.batch_scope("union"):
+        assert routing.resolve_batch() == "union"  # scope beats env
+    assert routing.resolve_batch() == "lane"
+    assert routing.resolve_batch("union") == "union"  # explicit beats env
+    with pytest.raises(ValueError, match="unknown route batch strategy"):
+        routing.resolve_batch("fleet")
+
+
+# ---------------------------------------------------------------------------
+# batched routing: one union-frontier pass vs Q per-lane serial routes
+# ---------------------------------------------------------------------------
+
+NQ = 3
+
+
+def _route_union_fields(dst, valid_l, payload_l, capacity, live):
+    """Per-lane ``Routed`` views of the shared union-frontier pass.
+
+    Reproduces the runtime's nesting: worker vmap (axis name) outside, a
+    query vmap inside, with per-lane batched ``query_index``/``query_live``
+    scalars on the context. ``dst`` (W, M) is lane-invariant; ``valid_l``
+    and the payload leaves carry a (W, NQ, M, ...) lane axis."""
+    nq = valid_l.shape[1]
+    qidx = jnp.arange(nq, dtype=jnp.int32)
+    live = jnp.asarray(live, bool)
+
+    def shard(d, v, p):
+        def lane(qi, vi, pi, lvi):
+            ctx = ChannelContext(AXIS, W, N_LOC, query_index=qi,
+                                 query_live=lvi, num_queries=nq)
+            r = routing.route_union(ctx, d, vi, pi, capacity)
+            return (r.ids, r.mask, r.payload, r.slot, r.sent_count,
+                    r.overflow)
+
+        return jax.vmap(lane)(qidx, v, p, live)
+
+    return run_sharded(shard, dst, valid_l, payload_l)
+
+
+def _serial_lane_fields(dst, valid_l, payload_l, capacity, live):
+    """Q independent serial route passes — the reference the per-lane
+    union views must reproduce (halted lanes route nothing)."""
+    out = []
+    for ql in range(valid_l.shape[1]):
+        v = valid_l[:, ql] & bool(live[ql])
+        p = jax.tree_util.tree_map(lambda a: a[:, ql], payload_l)
+        out.append(_route_fields("bucket", dst, v, p, capacity))
+    return out
+
+
+def _block_rows(ids_c, mask_c, pay_slices):
+    """Sorted (id, payload...) rows of one (receiver, sender) wire block —
+    the union pass reorders slots within a block but must deliver exactly
+    the serial multiset."""
+    keep = np.asarray(mask_c)
+    cols = [np.asarray(ids_c)[keep].reshape(-1, 1).astype(np.float64)]
+    for leaf in pay_slices:
+        a = np.asarray(leaf)[keep].astype(np.float64)
+        cols.append(a.reshape(a.shape[0],
+                              int(np.prod(a.shape[1:], dtype=np.int64))))
+    mat = np.concatenate(cols, axis=1)
+    return mat[np.lexsort(mat.T[::-1])]
+
+
+def _assert_union_matches_serial(union, serial, capacity, dst):
+    """The per-lane contract of the shared pass vs Q serial routes:
+
+      - ``sent_count`` is exact (per-lane per-peer wire occupancy);
+      - ``overflow`` is a conservative latch (union ranks dominate lane
+        ranks): it never misses a serial overflow;
+      - wherever the sending lane did not overflow, each (receiver,
+        sender) block delivers the exact serial multiset of
+        (id, payload) rows, and the sender-side slots place packed
+        messages in the destination owner's block."""
+    u_ids, u_mask, u_pay, u_slot, u_sent, u_ovf = union
+    u_pay_leaves = jax.tree_util.tree_leaves(u_pay)
+    nq = u_mask.shape[1]
+    for ql in range(nq):
+        s_ids, s_mask, s_pay, s_slot, s_sent, s_ovf = serial[ql]
+        s_pay_leaves = jax.tree_util.tree_leaves(s_pay)
+        np.testing.assert_array_equal(
+            np.asarray(u_sent[:, ql]), np.asarray(s_sent))
+        so = np.asarray(s_ovf)
+        uo = np.asarray(u_ovf[:, ql])
+        assert np.all(uo >= so), "union overflow missed a serial overflow"
+        # sender-side slot contract: a packed slot lands in the block of
+        # the destination's owner, and absent overflow the packed set is
+        # exactly the serial one
+        sl = np.asarray(u_slot[:, ql])
+        packed = sl < W * capacity
+        owner = np.clip(np.asarray(dst) // N_LOC, 0, W - 1)
+        np.testing.assert_array_equal(
+            (sl // capacity)[packed], owner[packed])
+        for w in range(W):
+            if not uo[w]:
+                np.testing.assert_array_equal(
+                    packed[w], np.asarray(s_slot[w]) < W * capacity)
+        for wrecv in range(W):
+            for wsend in range(W):
+                if uo[wsend]:
+                    continue  # drops differ under overflow; sets don't align
+                got = _block_rows(
+                    u_ids[wrecv, ql, wsend], u_mask[wrecv, ql, wsend],
+                    [lf[wrecv, ql, wsend] for lf in u_pay_leaves])
+                want = _block_rows(
+                    s_ids[wrecv, wsend], s_mask[wrecv, wsend],
+                    [lf[wrecv, wsend] for lf in s_pay_leaves])
+                np.testing.assert_array_equal(got, want)
+
+
+def _lane_instance(seed, m, nq=NQ, valid_frac=0.7):
+    rng = np.random.default_rng(seed)
+    dst = jnp.asarray(rng.integers(0, W * N_LOC, (W, m)).astype(np.int32))
+    valid_l = jnp.asarray(rng.random((W, nq, m)) < valid_frac)
+    payload_l = {
+        "f": jnp.asarray(rng.normal(size=(W, nq, m)).astype(np.float32)),
+        "i2": jnp.asarray(
+            rng.integers(-9, 9, (W, nq, m, 2)).astype(np.int32)),
+    }
+    return dst, valid_l, payload_l
+
+
+@pytest.mark.parametrize("case", ("plain", "overflow", "empty_lane",
+                                  "halted_lane", "disjoint"))
+def test_route_union_matches_per_lane(case):
+    m = 24
+    dst, valid_l, payload_l = _lane_instance(5, m)
+    live = [True] * NQ
+    cap = m
+    if case == "overflow":
+        cap = 3
+    elif case == "empty_lane":
+        valid_l = valid_l.at[:, 1].set(False)
+    elif case == "halted_lane":
+        live = [True, False, True]
+    elif case == "disjoint":
+        lane_of = jnp.arange(m) % NQ
+        valid_l = valid_l & (lane_of[None, None, :] ==
+                             jnp.arange(NQ)[None, :, None])
+    union = _route_union_fields(dst, valid_l, payload_l, cap, live)
+    serial = _serial_lane_fields(dst, valid_l, payload_l, cap, live)
+    _assert_union_matches_serial(union, serial, cap, dst)
+
+
+def test_route_union_halted_lane_cannot_pollute_the_wire():
+    """The pad/halt fix: a halted lane's (stale, garbage) frontier must
+    not reach the union — the live lanes' shared views are bit-identical
+    to a run where that lane simply has nothing to send, and the halted
+    lane's own view is empty."""
+    m = 20
+    dst, valid_l, payload_l = _lane_instance(9, m)
+    stale = valid_l.at[:, 2].set(True)        # lane 2: full garbage frontier
+    a = _route_union_fields(dst, stale, payload_l, m, [True, True, False])
+    quiet = valid_l.at[:, 2].set(False)       # lane 2: genuinely empty
+    b = _route_union_fields(dst, quiet, payload_l, m, [True, True, True])
+    _assert_bit_identical(a, b)
+    _, mask_a, _, _, sent_a, ovf_a = a
+    assert int(np.asarray(sent_a)[:, 2].sum()) == 0
+    assert not np.asarray(mask_a)[:, 2].any()
+    assert not np.asarray(ovf_a)[:, 2].any()
+
+
+def test_route_union_lane_varying_dst_falls_back_bit_identical():
+    """A per-lane ``dst`` makes positional slot sharing unsound; the
+    custom_vmap rule proves it via in_batched and runs Q serial passes —
+    bit-identical to the per-lane reference, positions included."""
+    m = 18
+    rng = np.random.default_rng(13)
+    dst_l = jnp.asarray(
+        rng.integers(0, W * N_LOC, (W, NQ, m)).astype(np.int32))
+    _, valid_l, payload_l = _lane_instance(13, m)
+    nq = NQ
+    qidx = jnp.arange(nq, dtype=jnp.int32)
+    live = jnp.ones((nq,), bool)
+
+    def shard(d, v, p):
+        def lane(qi, di, vi, pi, lvi):
+            ctx = ChannelContext(AXIS, W, N_LOC, query_index=qi,
+                                 query_live=lvi, num_queries=nq)
+            r = routing.route_union(ctx, di, vi, pi, m)
+            return (r.ids, r.mask, r.payload, r.slot, r.sent_count,
+                    r.overflow)
+
+        return jax.vmap(lane)(qidx, d, v, p, live)
+
+    union = run_sharded(shard, dst_l, valid_l, payload_l)
+    for ql in range(nq):
+        p = jax.tree_util.tree_map(lambda a: a[:, ql], payload_l)
+        serial = _route_fields("bucket", dst_l[:, ql], valid_l[:, ql], p, m)
+        _assert_bit_identical(
+            jax.tree_util.tree_map(lambda a: a[:, ql], union), serial)
+
+
 # ---------------------------------------------------------------------------
 # hypothesis property tests (optional-import, PR 1 convention; shared
 # instance space from tests/strategies.py)
@@ -133,6 +333,29 @@ if strategies.HAVE_HYPOTHESIS:
             _route_fields("bucket", dst, valid, payload, cap),
             _route_fields("sort", dst, valid, payload, cap),
         )
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        seed=strategies.seeds,
+        m=st.integers(1, 48),
+        cap_frac=st.floats(0.1, 1.0),
+        valid_frac=strategies.fractions,
+        live_bits=st.integers(0, 2 ** NQ - 1),
+    )
+    def test_route_union_parity_property(seed, m, cap_frac, valid_frac,
+                                         live_bits):
+        """Random lanes, random capacity (overflowing ones included),
+        random halt pattern: every per-lane view of the union pass
+        reproduces the serial per-lane contract — exact sent counts,
+        conservative overflow, exact delivered multisets where the lane
+        did not overflow, and empty views for halted lanes."""
+        dst, valid_l, payload_l = _lane_instance(seed, m,
+                                                 valid_frac=valid_frac)
+        live = [bool((live_bits >> i) & 1) for i in range(NQ)]
+        cap = max(1, int(m * cap_frac))
+        union = _route_union_fields(dst, valid_l, payload_l, cap, live)
+        serial = _serial_lane_fields(dst, valid_l, payload_l, cap, live)
+        _assert_union_matches_serial(union, serial, cap, dst)
 
     @settings(max_examples=25, deadline=None)
     @given(seed=strategies.seeds, m=st.integers(1, 400),
