@@ -37,6 +37,10 @@ EXPECTED = {
     "BENCH_routed_batching.json": {
         "scale", "workers", "q", "repeats", "mode", "programs", "headline",
     },
+    "BENCH_serving.json": {
+        "scale", "workers", "q", "lanes", "chunk_size", "rate", "seed",
+        "mode", "programs", "headline",
+    },
 }
 
 # Required keys inside nested blocks (artifact basename -> path -> keys).
@@ -53,6 +57,13 @@ NESTED = {
         "headline": {"program", "scale", "q", "speedup_union",
                      "speedup_lane", "union_vs_lane", "target",
                      "queries_per_s_union", "queries_per_s_serial",
+                     "meets_target"},
+    },
+    "BENCH_serving.json": {
+        "headline": {"program", "scale", "q", "lanes", "speedup",
+                     "queries_per_s_serve", "queries_per_s_batch",
+                     "p50_latency_steps", "p99_latency_steps",
+                     "p50_latency_s", "p99_latency_s", "target",
                      "meets_target"},
     },
 }

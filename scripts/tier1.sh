@@ -52,4 +52,10 @@ python -m repro bench-batch --scale 10 --queries 4 --workers 4 \
 python -m benchmarks.routed_batching --scale 10 --queries 4 --repeats 1 \
   --out "$smoke_dir/BENCH_routed_batching.json"
 python -m benchmarks.check_schema "$smoke_dir/BENCH_routed_batching.json"
+
+echo "== continuous-batching query service (smoke, <60s) =="
+python -m repro serve --smoke
+python -m benchmarks.serving --scale 8 --queries 6 --lanes 2 --chunk 2 \
+  --keys reach:basic --out "$smoke_dir/BENCH_serving.json"
+python -m benchmarks.check_schema "$smoke_dir/BENCH_serving.json"
 echo "tier1: all stages pass"

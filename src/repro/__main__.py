@@ -17,6 +17,11 @@ Subcommands:
           ``Engine.run_batch`` loop and once as a serial per-query loop,
           verify per-query outputs are bit-identical, and print
           queries/sec for both plus the speedup.
+  serve   the continuous-batching query service: stream Q queries of one
+          program through ``Engine.serve`` under a seeded Poisson
+          arrival schedule, verify every served output bit-identical to
+          a solo run, and print sustained queries/sec plus p50/p99
+          latency. ``--smoke`` is the <60s CI configuration.
 
 Examples:
 
@@ -25,6 +30,8 @@ Examples:
   python -m repro run sv:composed --scale 10 --mode fused --repeat 2
   python -m repro bench --scale 10 --keys wcc:basic,wcc:switch --json out.json
   python -m repro bench-batch --scale 10 --queries 16
+  python -m repro serve reach:basic --scale 10 --queries 32 --lanes 8
+  python -m repro serve --smoke
 """
 from __future__ import annotations
 
@@ -216,6 +223,63 @@ def cmd_bench_batch(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    import numpy as np
+
+    from repro.pregel.serve import QueryQueue
+
+    if args.smoke:
+        # the <60s CI stage: small scale, forced refills, full
+        # bit-identity verification
+        args.program = args.program or "reach:basic"
+        args.scale = 8
+        args.workers = 4
+        args.queries = 12
+        args.lanes = 3
+        args.chunk_size = 3
+    if args.program is None:
+        print("serve: a program key is required (or use --smoke)")
+        return 2
+    spec = resolve(args.program)
+    if spec.make_queries is None:
+        print(f"serve: {spec.key} has no query axis")
+        return 2
+    chunk = args.serve_chunk if args.serve_chunk else args.chunk_size
+    print(f"== serve {spec.key} (scale {args.scale}, W={args.workers}, "
+          f"Q={args.queries}, lanes={args.lanes}, chunk={chunk}, "
+          f"rate={args.rate}/step) ==")
+    graph, pg, inputs, prog = _prepare(spec, args)
+    schedule = spec.stream(graph, args.seed, args.queries, args.rate)
+    eng = Engine(mode="chunked", chunk_size=chunk,
+                 route_batch=args.route_batch)
+    res = eng.serve(prog, pg, QueryQueue.from_schedule(schedule),
+                    num_lanes=args.lanes, max_steps=args.max_steps)
+    lat = res.latency_summary()
+    print(f"served {res.num_queries} queries through {res.num_lanes} lanes: "
+          f"{res.dispatches} dispatches, {res.supersteps} supersteps "
+          f"(clock {res.clock}), wall {res.wall_time_s:.3f}s "
+          f"[{'hit' if res.cache_hit else f'compile {res.compile_time_s:.2f}s'}]")
+    print(f"  sustained {res.queries_per_s:8.1f} q/s   latency p50 "
+          f"{lat['p50_steps']:.0f} / p99 {lat['p99_steps']:.0f} steps "
+          f"({lat['p50_wall_s'] * 1e3:.1f} / {lat['p99_wall_s'] * 1e3:.1f} ms)")
+    if args.check:
+        # every served answer must be bit-identical to a solo run of the
+        # same query (Q=1 run_batch — itself pinned to Engine.run by the
+        # tier-1 suite)
+        for rec in res.records:
+            solo = eng.run_batch(prog, pg, [rec.query],
+                                 max_steps=args.max_steps)
+            np.testing.assert_array_equal(np.asarray(rec.output),
+                                          np.asarray(solo.outputs[0]))
+            assert rec.steps == int(solo.query_steps[0]), \
+                (rec.qid, rec.steps, int(solo.query_steps[0]))
+            assert rec.bytes_by_channel == solo.query_bytes(0), rec.qid
+            assert rec.msgs_by_channel == solo.query_msgs(0), rec.qid
+        print(f"  bit-identity: all {res.num_queries} served outputs, step "
+              "counts and traffic match solo runs")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro", description=__doc__,
@@ -280,6 +344,31 @@ def main(argv=None) -> int:
                       help="batch size Q")
     p_bb.add_argument("--json", default=None, help="write rows to JSON")
     p_bb.set_defaults(fn=cmd_bench_batch)
+
+    p_sv = sub.add_parser(
+        "serve",
+        help="continuous-batching query service under a Poisson workload")
+    p_sv.add_argument("program", nargs="?", default=None,
+                      help="a query-parametric program "
+                           "(algorithm or algorithm:variant)")
+    common(p_sv)
+    p_sv.add_argument("--queries", type=int, default=32,
+                      help="number of queries in the arrival stream")
+    p_sv.add_argument("--lanes", type=int, default=8,
+                      help="always-on query lanes (the batch width)")
+    p_sv.add_argument("--serve-chunk", type=int, default=None,
+                      help="supersteps per dispatch = admission "
+                           "granularity (default: --chunk-size)")
+    p_sv.add_argument("--rate", type=float, default=1.0,
+                      help="Poisson arrival rate (queries per superstep)")
+    p_sv.add_argument("--route-batch", default=None,
+                      choices=("union", "lane"))
+    p_sv.add_argument("--no-check", dest="check", action="store_false",
+                      help="skip the per-query bit-identity verification")
+    p_sv.add_argument("--smoke", action="store_true",
+                      help="the <60s CI configuration (small scale, "
+                           "forced refills, full verification)")
+    p_sv.set_defaults(fn=cmd_serve)
 
     args = ap.parse_args(argv)
     return args.fn(args)

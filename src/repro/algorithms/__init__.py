@@ -92,6 +92,18 @@ class ProgramSpec:
             raise ValueError(f"{self.key} has no query axis")
         return list(self.make_queries(graph, seed, q))
 
+    def stream(self, graph: gen.EdgeList, seed: int = 0, q: int = 8,
+               rate: float = 1.0) -> list:
+        """A serving workload for the program's query axis:
+        ``(arrival_superstep, query)`` pairs — the spec's deterministic
+        query generator zipped with a seeded Poisson arrival process at
+        ``rate`` expected arrivals per superstep. Feed it to
+        ``QueryQueue.from_schedule`` / ``Engine.serve``."""
+        from repro.pregel.serve import poisson_arrivals
+
+        return list(zip(poisson_arrivals(q, rate, seed),
+                        self.queries(graph, seed, q)))
+
     def make(self, graph: Optional[gen.EdgeList] = None, seed: int = 0,
              **knobs) -> VertexProgram:
         """Build the program, threading generated problem inputs through

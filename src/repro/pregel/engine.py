@@ -42,6 +42,7 @@ from repro.core import routing
 from repro.graph.pgraph import PartitionedGraph
 from repro.kernels import ops as kops
 from repro.pregel import runtime
+from repro.pregel import serve as serving
 from repro.pregel.program import VertexProgram
 
 
@@ -102,10 +103,16 @@ class Engine:
 
     def _compile_cached(self, prog: VertexProgram, pg: PartitionedGraph,
                         state0, ms: int, co: bool, key_extra: Tuple = (),
-                        num_queries: Optional[int] = None):
-        """The one cache-lookup path (run and run_batch share it, so a
-        new config knob lands in both keys or neither): return
-        ``(exe, hit)`` and bump the session counters."""
+                        num_queries: Optional[int] = None,
+                        serve_chunk: Optional[int] = None):
+        """The one cache-lookup path (run, run_batch, and serve share it,
+        so a new config knob lands in every key or none): return
+        ``(exe, hit)`` and bump the session counters.
+
+        ``serve_chunk`` selects the serving substrate: a chunked scan at
+        that chunk size with per-lane ages, regardless of the engine's
+        own mode (the serve loop drives dispatches itself).
+        """
         key = (prog, ms, co, self.use_kernel, self.route_impl,
                self.route_batch,
                runtime.graph_signature(pg),
@@ -115,12 +122,15 @@ class Engine:
         if not hit:
             # compile_supersteps/execute scrub the graph themselves, so
             # any graph with this signature replays the executable
+            mode = self.mode if serve_chunk is None else "chunked"
+            chunk = self.chunk_size if serve_chunk is None else serve_chunk
             exe = runtime.compile_supersteps(
                 pg, prog.step, state0, max_steps=ms, backend=self.backend,
-                mesh=self.mesh, check_overflow=co, mode=self.mode,
-                chunk_size=self.chunk_size, channels=prog.channels,
+                mesh=self.mesh, check_overflow=co, mode=mode,
+                chunk_size=chunk, channels=prog.channels,
                 use_kernel=self.use_kernel, route_impl=self.route_impl,
                 route_batch=self.route_batch, num_queries=num_queries,
+                serve=serve_chunk is not None,
             )
             self._cache[key] = exe
             self.compiles += 1
@@ -217,6 +227,74 @@ class Engine:
             for qi in range(q)
         ]
         res.output = res.outputs
+        return res
+
+    def serve(self, prog: VertexProgram, pg: PartitionedGraph,
+              requests, *, num_lanes: int = 8,
+              chunk_size: Optional[int] = None,
+              max_steps: Optional[int] = None,
+              check_overflow: Optional[bool] = None
+              ) -> serving.ServeResult:
+        """Continuous-batching query service: serve a stream of queries
+        through ``num_lanes`` always-on lanes, admitting from the queue
+        at every chunk (dispatch) boundary as halted queries vacate
+        their lanes (see ``repro.pregel.serve``).
+
+        ``requests`` is a :class:`~repro.pregel.serve.QueryQueue`
+        (arrival times in supersteps) or a plain iterable of query
+        values (all arrive at t=0). Admission granularity is
+        ``chunk_size`` supersteps (default: the engine's chunk size).
+        One executable is compiled for the whole session — refills
+        rewrite lane state in place and never re-trace — and it is
+        cached under (program, graph shape, lanes, chunk), so a second
+        session with the same shape replays it warm.
+
+        Every served query is bit-identical to a solo ``Engine.run``:
+        per-lane ages stand in for the step counter, so a query admitted
+        at clock 400 sees step indices 0,1,2,… exactly as a fresh run
+        would, and its harvested output/steps/traffic match the solo
+        run's. Returns a :class:`~repro.pregel.serve.ServeResult` with
+        per-query :class:`~repro.pregel.serve.QueryRecord` entries
+        (qid order) and session aggregates.
+        """
+        if prog.query_init is None:
+            raise ValueError(
+                f"program {prog.name!r} declares no query axis "
+                "(VertexProgram.query_init) — it cannot be served")
+        if num_lanes < 1:
+            raise ValueError(f"need at least one lane, got {num_lanes}")
+        queue = serving.as_queue(requests)
+        ms = prog.max_steps if max_steps is None else max_steps
+        co = prog.check_overflow if check_overflow is None else check_overflow
+        chunk = self.chunk_size if chunk_size is None else chunk_size
+        if len(queue) == 0:
+            return serving.ServeResult(
+                program=prog.name, records=[], num_lanes=num_lanes,
+                chunk_size=chunk, max_steps=ms, supersteps=0, clock=0,
+                dispatches=0, wall_time_s=0.0, bytes_by_channel={},
+                msgs_by_channel={}, route_batch=self.route_batch,
+                cache_hit=True, engine_compiles=self.compiles,
+                engine_cache_hits=self.cache_hits)
+        # lane-state template: shapes/dtypes come from any query's init
+        # state (all lanes are overwritten on admission; unoccupied
+        # lanes are dead — halted, zero traffic, out of the union)
+        template = prog.query_init(pg, queue.peek_query())
+        state0 = jax.tree_util.tree_map(
+            lambda leaf: jnp.repeat(leaf[:, None], num_lanes, axis=1),
+            template)
+        exe, hit = self._compile_cached(
+            prog, pg, state0, ms, co,
+            key_extra=("serve", num_lanes, chunk),
+            num_queries=num_lanes, serve_chunk=chunk)
+        res = serving.serve_loop(exe, prog, pg, state0, queue, num_lanes,
+                                 chunk, ms, co)
+        res.program = prog.name
+        res.route_batch = exe.route_batch
+        res.cache_hit = hit
+        if not hit:
+            res.compile_time_s = exe.compile_time_s
+        res.engine_compiles = self.compiles
+        res.engine_cache_hits = self.cache_hits
         return res
 
 

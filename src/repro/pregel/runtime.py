@@ -117,6 +117,14 @@ class RunResult:
     query_bytes_by_channel: Optional[Dict[str, Any]] = None  # name->(Q,)
     query_msgs_by_channel: Optional[Dict[str, Any]] = None   # name->(Q,)
     outputs: Any = None
+    # Pad-lane audit (batched runs): bucket-padding lanes start halted
+    # (``query_live=False`` end to end), so they must never step, occupy
+    # wire slots, or be charged. These aggregates over the pad lanes are
+    # the evidence — all three stay zero (pinned by tests/test_batch.py).
+    num_pad_lanes: int = 0
+    pad_steps: int = 0
+    pad_bytes: int = 0
+    pad_msgs: int = 0
 
     @property
     def total_bytes(self) -> int:
@@ -238,6 +246,26 @@ class CompiledSupersteps:
     route_batch: str = "union"
     # query-axis width the loop was lowered with (None = unbatched)
     num_queries: Optional[int] = None
+    # serving substrate (compile_supersteps(serve=True)): the chunked
+    # executable carries per-lane ages instead of a global step index so
+    # lanes can be swapped at chunk boundaries (Engine.serve)
+    serve: bool = False
+
+    def serve_chunk(self, graph: PartitionedGraph, state, age, halted,
+                    overflow):
+        """One serving dispatch: advance every live lane by up to
+        ``chunk_size`` supersteps. Carry: per-lane ``age`` (steps since
+        admission — the step index each lane's step function sees),
+        ``halted`` (lane voted halt OR lane unoccupied), ``overflow``.
+        Returns ``(state, age, halted, overflow, d_steps, db, dm)`` with
+        ``d_steps`` the per-lane steps advanced this chunk and db/dm the
+        per-step stat stream. The host (``repro.pregel.serve``) harvests
+        finished lanes and refills them between calls — this method never
+        re-traces, one executable serves the whole session."""
+        if not self.serve:
+            raise ValueError("not a serving executable "
+                             "(compile_supersteps(serve=True))")
+        return self._fn(scrub_graph(graph), state, age, halted, overflow)
 
     def execute(self, graph: PartitionedGraph, state0: Any,
                 num_real_queries: Optional[int] = None) -> RunResult:
@@ -250,6 +278,9 @@ class CompiledSupersteps:
         # the executable was lowered against the scrubbed treedef, so any
         # same-signature graph replays (name/new_of_old identity dropped)
         graph = scrub_graph(graph)
+        if self.serve:
+            raise ValueError("serving executables are driven chunk by "
+                             "chunk (serve_chunk / Engine.serve)")
         if self.num_queries is not None:
             res = _exec_batched(self._fn, graph, state0, self.mode,
                                 self.max_steps, self.check_overflow,
@@ -285,6 +316,7 @@ def compile_supersteps(
     route_impl: Optional[str] = None,
     route_batch: Optional[str] = None,
     num_queries: Optional[int] = None,
+    serve: bool = False,
 ) -> CompiledSupersteps:
     """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
     shape, without running it. See :func:`run_supersteps` for semantics.
@@ -306,6 +338,14 @@ def compile_supersteps(
     (``repro.core.routing.route_union``), ``"lane"`` routes each lane
     independently under the vmap (the pre-union behavior). Ignored when
     num_queries is None.
+
+    serve=True (requires num_queries and mode="chunked") lowers the
+    *serving* substrate instead: lanes are independent tenancies, so the
+    step index each lane sees is its own age (steps since admission, a
+    ``(Q,)`` carry leaf) rather than a shared loop counter, a lane's
+    step budget is ``age < max_steps``, and the executable surfaces the
+    chunk-boundary carry for the host-side lane swap
+    (:meth:`CompiledSupersteps.serve_chunk`, ``repro.pregel.serve``).
     """
     # lower against the scrubbed graph: the compiled treedef must not
     # capture the host-only identity statics, or execute() could only
@@ -316,6 +356,11 @@ def compile_supersteps(
         mode = "fused"
     if mode not in ("fused", "chunked", "host"):
         raise ValueError(f"unknown execution mode {mode!r}")
+    if serve and (num_queries is None or mode != "chunked"):
+        raise ValueError(
+            "serve=True needs the chunked batched substrate "
+            f"(num_queries=Q, mode='chunked'); got num_queries="
+            f"{num_queries}, mode={mode!r}")
 
     traced_names: set = set()
 
@@ -363,7 +408,10 @@ def compile_supersteps(
             # per-lane (index, live) scalars are batched alongside so the
             # union-frontier routed channels always see a Q-batched
             # operand (their custom_vmap rule fires on the query trace).
-            q_inner = jax.vmap(shard_step, in_axes=(None, 0, None, 0))
+            # Serving compiles batch the step index too: each lane's
+            # step function sees its own age, not a shared loop counter.
+            step_ax = 0 if serve else None
+            q_inner = jax.vmap(shard_step, in_axes=(None, 0, step_ax, 0))
 
             def shard_step_q(g_shard, state_shard, step_idx, live):
                 qinfo = (jnp.arange(num_queries, dtype=jnp.int32),
@@ -439,7 +487,11 @@ def compile_supersteps(
             registry = ChannelRegistry.declare(sorted(names), shape=stat_shape)
         elif mode in ("fused", "chunked"):
             probe = map_shards(make_shard_step(None))
-            probe_args = (graph, state0, jnp.asarray(0, jnp.int32))
+            if serve:
+                step_probe = jnp.zeros((num_queries,), jnp.int32)
+            else:
+                step_probe = jnp.asarray(0, jnp.int32)
+            probe_args = (graph, state0, step_probe)
             if num_queries is not None:
                 probe_args += (jnp.ones((num_queries,), bool),)
             out_struct = jax.eval_shape(probe, *probe_args)
@@ -452,14 +504,20 @@ def compile_supersteps(
         tc = time.perf_counter()
         if num_queries is not None:
             h0 = jnp.zeros((num_queries,), bool)
-            if mode == "host":
+            if serve:
+                a0 = jnp.zeros((num_queries,), jnp.int32)
+                fn = (jax.jit(_make_serve_chunk(
+                        mapped, registry, max_steps, check_overflow,
+                        chunk_size, num_queries))
+                      .lower(graph, state0, a0, h0, h0).compile())
+            elif mode == "host":
                 fn = (jax.jit(_make_batched_step(mapped, num_queries))
                       .lower(graph, state0, i0, h0).compile())
             elif mode == "fused":
                 fn = (jax.jit(_make_batched_fused_loop(
                         mapped, registry, max_steps, check_overflow,
                         num_queries))
-                      .lower(graph, state0).compile())
+                      .lower(graph, state0, h0).compile())
             else:
                 fn = (jax.jit(_make_batched_chunk(
                         mapped, registry, max_steps, check_overflow,
@@ -510,6 +568,7 @@ def compile_supersteps(
         route_impl=resolved_route,
         route_batch=resolved_batch,
         num_queries=num_queries,
+        serve=serve,
     )
 
 
@@ -781,7 +840,10 @@ def _make_batched_fused_loop(mapped, registry, max_steps, check_overflow, q):
     zeros = registry.zeros()
     bstep = _make_batched_step(mapped, q)
 
-    def loop(graph, state):
+    # halted0 is an argument (not a constant) so bucket-padding lanes can
+    # start halted: a pad lane then never steps, never reaches the union
+    # route pass (query_live=False end to end), and is never charged
+    def loop(graph, state, halted0):
         def cond(carry):
             _, i, halted, overflow, _, _, _, _ = carry
             go = jnp.any(~halted) & (i < max_steps)
@@ -803,8 +865,8 @@ def _make_batched_fused_loop(mapped, registry, max_steps, check_overflow, q):
                     steps_q, nb2, nm2, wrapped)
 
         qz = jnp.zeros((q,), bool)
-        init = (state, jnp.asarray(0, jnp.int32), qz, qz,
-                jnp.zeros((q,), jnp.int32), zeros, zeros,
+        init = (state, jnp.asarray(0, jnp.int32), jnp.asarray(halted0, bool),
+                qz, jnp.zeros((q,), jnp.int32), zeros, zeros,
                 jnp.zeros((), bool))
         return jax.lax.while_loop(cond, body, init)
 
@@ -847,6 +909,66 @@ def _make_batched_chunk(mapped, registry, max_steps, check_overflow,
     return chunk
 
 
+def _make_serve_chunk(mapped, registry, max_steps, check_overflow,
+                      chunk_size, q):
+    """The serving substrate (``Engine.serve``): a scan of up to
+    ``chunk_size`` supersteps whose carry is per-lane ``(age, halted,
+    overflow)`` instead of a shared loop counter.
+
+    Each lane is an independent tenancy: its step function sees its own
+    ``age`` as the step index (so a query admitted at global superstep 40
+    is bit-identical to a solo run starting at 0), its budget is ``age <
+    max_steps``, and a lane that is halted, budget-exhausted, or
+    unoccupied (the host marks it halted) is *dead* — state frozen bit
+    for bit, traffic masked to zero, excluded from the union route pass
+    via ``query_live``. The scan skips remaining iterations once every
+    lane is dead, so a chunk never does work past its last live step."""
+    K = max(1, chunk_size)
+    zeros = registry.zeros()
+
+    def chunk(graph, state, age0, halted0, overflow0):
+        def body(carry, _):
+            state, age, halted, overflow = carry
+            dead = halted | (age >= max_steps)
+            stop = jnp.all(dead)
+            if check_overflow:
+                stop = stop | jnp.any(overflow)
+
+            def do(operand):
+                state, age, halted, overflow = operand
+                live = ~(halted | (age >= max_steps))
+                new_state, halt, ovf, db, dm = mapped(graph, state, age, live)
+                new_state = jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(_qmask(live, n), n, o),
+                    new_state, state)
+                db = jax.tree_util.tree_map(
+                    lambda d: jnp.where(live, d, 0), db)
+                dm = jax.tree_util.tree_map(
+                    lambda d: jnp.where(live, d, 0), dm)
+                # only a live lane's own vote may halt it: a dead lane's
+                # (discarded) computation must not flip its flags
+                halted2 = halted | (_qrow(halt, q) & live)
+                overflow2 = overflow | (_qrow(ovf, q) & live)
+                return ((new_state, age + live.astype(jnp.int32),
+                         halted2, overflow2),
+                        (db, dm, live.astype(jnp.int32)))
+
+            def skip(operand):
+                return (operand, (zeros, zeros, jnp.zeros((q,), jnp.int32)))
+
+            return jax.lax.cond(stop, skip, do,
+                                (state, age, halted, overflow))
+
+        (state, age, halted, overflow), (db, dm, lives) = jax.lax.scan(
+            body,
+            (state, jnp.asarray(age0, jnp.int32),
+             jnp.asarray(halted0, bool), jnp.asarray(overflow0, bool)),
+            None, length=K)
+        return state, age, halted, overflow, lives.sum(axis=0), db, dm
+
+    return chunk
+
+
 def _raise_query_overflow(overflow_q: np.ndarray, steps: int):
     qs = np.flatnonzero(overflow_q).tolist()
     raise RuntimeError(
@@ -859,7 +981,12 @@ def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
                     steps_q, q_real, mode, dispatches, wall, step_times,
                     overhead, check_overflow) -> RunResult:
     # report only the real leading lanes — bucket-padding lanes (which
-    # mirror query 0) never surface in views, totals, or errors
+    # start halted) never surface in views, totals, or errors; their
+    # aggregates ride along as the dead-pad audit trail (all zero)
+    num_pad = len(steps_q) - q_real
+    pad_steps = int(steps_q[q_real:].sum())
+    pad_bytes = int(sum(v[q_real:].sum() for v in q_bytes.values()))
+    pad_msgs = int(sum(v[q_real:].sum() for v in q_msgs.values()))
     halted_q = halted_q[:q_real]
     overflow_q = overflow_q[:q_real]
     steps_q = steps_q[:q_real]
@@ -883,14 +1010,21 @@ def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
         query_halted=halted_q,
         query_bytes_by_channel=q_bytes,
         query_msgs_by_channel=q_msgs,
+        num_pad_lanes=num_pad,
+        pad_steps=pad_steps,
+        pad_bytes=pad_bytes,
+        pad_msgs=pad_msgs,
     )
 
 
 def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
                   q, q_real) -> RunResult:
+    # bucket-padding lanes start halted: dead end to end (no steps, no
+    # wire slots, no traffic) instead of shadow-running query 0
+    pad_halted = jnp.arange(q) >= q_real
     if mode == "fused":
         t0 = time.perf_counter()
-        out = compiled(graph, state0)
+        out = compiled(graph, state0, pad_halted)
         t_enq = time.perf_counter()
         state, steps, halted, overflow, steps_q, nb, nm, wrapped = out
         jax.block_until_ready(state)
@@ -924,7 +1058,7 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
             into[k] = into.get(k, 0) + row
 
     state = state0
-    halted = jnp.zeros((q,), bool)
+    halted = pad_halted
     steps_q = np.zeros((q,), np.int64)
     overflow_acc = np.zeros((q,), bool)
     step_times = []

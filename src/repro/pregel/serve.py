@@ -1,0 +1,367 @@
+"""Continuous-batching query service — lane admission at chunk boundaries.
+
+``Engine.run_batch`` answers a *closed* batch: Q queries enter together
+and the loop runs until the last one halts, so a lane whose query
+finished early rides dead in the carry until the whole batch drains.
+This module opens the batch the same way continuous batching does in LLM
+serving: the batched loop becomes an always-on session with a fixed lane
+count, and at every chunk (dispatch) boundary lanes whose queries voted
+halt are *harvested* (output extracted, per-lane steps/traffic sliced
+out of the stat stream) and *refilled* from a :class:`QueryQueue` via
+``VertexProgram.query_init`` — the union-frontier routed data plane
+(PR 6) picks the fresh frontiers up automatically because admission just
+flips the lane's ``query_live`` bit and rewrites its state slice.
+
+The substrate is the chunked scan compiled once per session
+(``repro.pregel.runtime.compile_supersteps(serve=True)``): per-lane ages
+replace the shared step counter, so every tenancy is bit-identical to a
+solo ``Engine.run`` of the same query — output, step count, and
+per-channel traffic (the contract ``tests/test_serve.py`` pins across
+chunk sizes, both ``route_batch`` strategies, and the shard_map
+backend). One executable serves the whole session; refills never
+re-trace.
+
+Time has two axes: the *logical clock* counts supersteps (deterministic
+— latency in supersteps is reproducible run to run) and wall time is
+measured at dispatch boundaries. When every lane is idle and the next
+arrival is in the future the clock fast-forwards instead of spinning.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.pregel import runtime
+
+
+def poisson_arrivals(n: int, rate: float, seed: int = 0) -> List[int]:
+    """``n`` arrival times (in supersteps) of a seeded Poisson process
+    with ``rate`` expected arrivals per superstep: cumulative exponential
+    gaps, floored to the superstep grid. Deterministic in (n, rate,
+    seed) — the serving benchmark's workload generator."""
+    if rate <= 0:
+        raise ValueError(f"arrival rate must be positive, got {rate}")
+    rng = np.random.default_rng(77 + seed)
+    gaps = rng.exponential(scale=1.0 / rate, size=n)
+    return np.floor(np.cumsum(gaps)).astype(np.int64).tolist()
+
+
+@dataclasses.dataclass
+class _Entry:
+    arrival: int
+    qid: int
+    query: Any
+    # wall timestamp at which the serving loop first saw this arrival due
+    # (set once by mark_eligible; queue wait counts toward wall latency)
+    wall_eligible_s: Optional[float] = None
+
+    def __lt__(self, other):  # heap order: arrival time, then FIFO
+        return (self.arrival, self.qid) < (other.arrival, other.qid)
+
+
+class QueryQueue:
+    """Arrival-ordered query queue for :meth:`Engine.serve`.
+
+    Entries are ``(arrival, query)`` with ``arrival`` in supersteps on
+    the session's logical clock; ties admit in push (FIFO) order, so a
+    given schedule always maps to the same lane assignment — the
+    determinism the serving benchmark's bit-identity check rides on.
+    """
+
+    def __init__(self):
+        self._heap: List[_Entry] = []
+        self._next_qid = 0
+
+    def push(self, query: Any, arrival: int = 0) -> int:
+        """Enqueue one query; returns its qid (dense, in push order)."""
+        if arrival < 0:
+            raise ValueError(f"arrival must be >= 0, got {arrival}")
+        qid = self._next_qid
+        self._next_qid += 1
+        heapq.heappush(self._heap, _Entry(int(arrival), qid, query))
+        return qid
+
+    @classmethod
+    def from_queries(cls, queries: Iterable[Any]) -> "QueryQueue":
+        """All queries arrive at t=0 (the all-at-once schedule)."""
+        q = cls()
+        for query in queries:
+            q.push(query)
+        return q
+
+    @classmethod
+    def from_schedule(cls, pairs: Iterable[tuple]) -> "QueryQueue":
+        """From ``(arrival, query)`` pairs (e.g. ``ProgramSpec.stream``)."""
+        q = cls()
+        for arrival, query in pairs:
+            q.push(query, arrival)
+        return q
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def peek_query(self) -> Any:
+        """The next query to be admitted (state-template source)."""
+        return self._heap[0].query
+
+    def next_arrival(self) -> Optional[int]:
+        return self._heap[0].arrival if self._heap else None
+
+    def pop_ready(self, now: int) -> Optional[_Entry]:
+        """Pop the earliest entry whose arrival has passed, else None."""
+        if self._heap and self._heap[0].arrival <= now:
+            return heapq.heappop(self._heap)
+        return None
+
+    def mark_eligible(self, now: int, wall_s: float) -> None:
+        """Stamp the wall time at which due entries became admissible
+        (first boundary with ``arrival <= now``) — queue wait is part of
+        a query's wall latency even before it lands in a lane."""
+        for e in self._heap:
+            if e.arrival <= now and e.wall_eligible_s is None:
+                e.wall_eligible_s = wall_s
+
+
+@dataclasses.dataclass
+class QueryRecord:
+    """One served query: identity, placement, timing, and the per-tenancy
+    result/accounting (counts only this occupancy of the lane — never
+    inherited from the previous occupant)."""
+
+    qid: int
+    query: Any
+    lane: int
+    arrival: int                 # scheduled arrival (logical clock)
+    admitted: int                # boundary at which it entered its lane
+    finished: int = -1           # boundary at which it was harvested
+    steps: int = 0               # supersteps it actually ran
+    halted: bool = False         # False = harvested on the step budget
+    output: Any = None
+    bytes_by_channel: Dict[str, int] = dataclasses.field(default_factory=dict)
+    msgs_by_channel: Dict[str, int] = dataclasses.field(default_factory=dict)
+    wall_eligible_s: float = 0.0
+    wall_admitted_s: float = 0.0
+    wall_finished_s: float = 0.0
+
+    @property
+    def latency_steps(self) -> int:
+        """Arrival-to-harvest latency on the logical clock (supersteps,
+        including queue wait and chunk-boundary quantization)."""
+        return self.finished - self.arrival
+
+    @property
+    def latency_wall_s(self) -> float:
+        return self.wall_finished_s - self.wall_eligible_s
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.bytes_by_channel.values()))
+
+    @property
+    def total_msgs(self) -> int:
+        return int(sum(self.msgs_by_channel.values()))
+
+
+@dataclasses.dataclass
+class ServeResult:
+    """One serving session: per-query records plus session aggregates."""
+
+    program: str
+    records: List[QueryRecord]
+    num_lanes: int
+    chunk_size: int
+    max_steps: int
+    supersteps: int              # supersteps actually executed
+    clock: int                   # final logical clock (incl. idle jumps)
+    dispatches: int
+    wall_time_s: float
+    bytes_by_channel: Dict[str, int]
+    msgs_by_channel: Dict[str, int]
+    route_batch: str = ""
+    # engine/session stamps (repro.pregel.engine.Engine.serve)
+    cache_hit: bool = False
+    compile_time_s: float = 0.0
+    engine_compiles: int = 0
+    engine_cache_hits: int = 0
+
+    @property
+    def outputs(self) -> List[Any]:
+        return [r.output for r in self.records]
+
+    @property
+    def num_queries(self) -> int:
+        return len(self.records)
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.bytes_by_channel.values()))
+
+    @property
+    def total_msgs(self) -> int:
+        return int(sum(self.msgs_by_channel.values()))
+
+    @property
+    def queries_per_s(self) -> float:
+        return self.num_queries / self.wall_time_s if self.wall_time_s else 0.0
+
+    def latency_summary(self) -> Dict[str, float]:
+        """p50/p99/mean latency in supersteps (deterministic) and wall
+        seconds — the numbers ``BENCH_serving.json`` reports."""
+        if not self.records:
+            return {k: 0.0 for k in (
+                "p50_steps", "p99_steps", "mean_steps",
+                "p50_wall_s", "p99_wall_s", "mean_wall_s")}
+        steps = np.array([r.latency_steps for r in self.records], np.float64)
+        wall = np.array([r.latency_wall_s for r in self.records], np.float64)
+        return {
+            "p50_steps": float(np.percentile(steps, 50)),
+            "p99_steps": float(np.percentile(steps, 99)),
+            "mean_steps": float(steps.mean()),
+            "p50_wall_s": float(np.percentile(wall, 50)),
+            "p99_wall_s": float(np.percentile(wall, 99)),
+            "mean_wall_s": float(wall.mean()),
+        }
+
+
+def as_queue(requests) -> QueryQueue:
+    """A QueryQueue passes through; any other iterable is an
+    all-at-once batch of plain query values (arrival 0). Build a
+    :meth:`QueryQueue.from_schedule` explicitly for timed arrivals."""
+    if isinstance(requests, QueryQueue):
+        return requests
+    return QueryQueue.from_queries(requests)
+
+
+def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
+               chunk_size: int, max_steps: int,
+               check_overflow: bool) -> ServeResult:
+    """Drive one serving session over a compiled serve executable.
+
+    The boundary protocol, in order: (1) admit — pop due arrivals into
+    free lanes, writing ``query_init`` state into the lane slice and
+    clearing its age/halt/overflow; (2) if every lane is idle,
+    fast-forward the clock to the next arrival (or finish); (3) dispatch
+    one chunk; (4) account the chunk's per-lane steps/traffic to each
+    lane's *current* occupant; (5) harvest lanes whose query halted or
+    exhausted its step budget. Unoccupied lanes stay marked halted, so
+    they are dead end to end — frozen state, zero traffic, masked out of
+    the union route pass.
+    """
+    graph = runtime.scrub_graph(pg)
+    L = num_lanes
+    state = state0
+    age = np.zeros(L, np.int32)
+    halted = np.ones(L, bool)          # all lanes start unoccupied
+    overflow = np.zeros(L, bool)
+    occupant: List[Optional[QueryRecord]] = [None] * L
+    records: List[QueryRecord] = []
+    sess_bytes: Dict[str, int] = {}
+    sess_msgs: Dict[str, int] = {}
+    clock = 0
+    executed = 0
+    dispatches = 0
+    t0 = time.perf_counter()
+    now = lambda: time.perf_counter() - t0
+
+    while True:
+        queue.mark_eligible(clock, now())
+        # --- admission: FIFO by (arrival, qid) into the lowest free lane
+        for lane in range(L):
+            if occupant[lane] is not None:
+                continue
+            entry = queue.pop_ready(clock)
+            if entry is None:
+                break
+            qstate = prog.query_init(pg, entry.query)
+            state = jax.tree_util.tree_map(
+                lambda leaf, new, _l=lane: leaf.at[:, _l].set(new),
+                state, qstate)
+            age[lane] = 0
+            halted[lane] = False
+            overflow[lane] = False
+            occupant[lane] = QueryRecord(
+                qid=entry.qid, query=entry.query, lane=lane,
+                arrival=entry.arrival, admitted=clock,
+                wall_eligible_s=(entry.wall_eligible_s
+                                 if entry.wall_eligible_s is not None
+                                 else now()),
+                wall_admitted_s=now())
+
+        if all(r is None for r in occupant):
+            nxt = queue.next_arrival()
+            if nxt is None:
+                break               # queue drained, lanes empty: done
+            clock = max(clock, nxt)  # idle — jump to the next arrival
+            continue
+
+        # --- one chunk: up to chunk_size supersteps, all live lanes
+        state, age_j, halted_j, overflow_j, d_steps, db, dm = \
+            exe.serve_chunk(graph, state, age, halted, overflow)
+        jax.block_until_ready(state)
+        dispatches += 1
+        # host-side writable copies: admission/harvest mutate them in place
+        age = np.array(age_j)
+        halted = np.array(halted_j)
+        overflow = np.array(overflow_j)
+        d_steps = np.asarray(d_steps).astype(np.int64)
+        steps_run = int(d_steps.max()) if L else 0
+        clock += steps_run
+        executed += steps_run
+
+        # --- per-tenancy accounting: this chunk's stats belong to the
+        # lanes' current occupants (admission only happens at boundaries,
+        # so a chunk is never split across tenancies)
+        occupied = [l for l in range(L) if occupant[l] is not None]
+        for acc, per_lane, delta in ((sess_bytes, "bytes_by_channel", db),
+                                     (sess_msgs, "msgs_by_channel", dm)):
+            for name, v in delta.items():
+                row = runtime._host_q(v, L)
+                acc[name] = acc.get(name, 0) + int(row.sum())
+                for lane in occupied:
+                    d = getattr(occupant[lane], per_lane)
+                    d[name] = d.get(name, 0) + int(row[lane])
+        for lane in occupied:
+            occupant[lane].steps += int(d_steps[lane])
+
+        if check_overflow and any(overflow[l] for l in occupied):
+            bad = [occupant[l].qid for l in occupied if overflow[l]]
+            raise RuntimeError(
+                f"channel capacity overflow in serving session for "
+                f"queries {bad} — increase the channel capacity in the "
+                "routing plan")
+
+        # --- harvest: lanes whose query halted or ran out of budget
+        for lane in occupied:
+            if not (halted[lane] or age[lane] >= max_steps):
+                continue
+            rec = occupant[lane]
+            lane_state = jax.tree_util.tree_map(
+                lambda leaf, _l=lane: leaf[:, _l], state)
+            rec.output = prog.extract(pg, lane_state)
+            rec.halted = bool(halted[lane])
+            rec.finished = clock
+            rec.wall_finished_s = now()
+            records.append(rec)
+            occupant[lane] = None
+            halted[lane] = True      # lane is dead until refilled
+
+    records.sort(key=lambda r: r.qid)
+    return ServeResult(
+        program=prog.name,
+        records=records,
+        num_lanes=L,
+        chunk_size=chunk_size,
+        max_steps=max_steps,
+        supersteps=executed,
+        clock=clock,
+        dispatches=dispatches,
+        wall_time_s=time.perf_counter() - t0,
+        bytes_by_channel=sess_bytes,
+        msgs_by_channel=sess_msgs,
+    )

@@ -131,6 +131,25 @@ def test_pad_lanes_never_reach_the_wire(route_batch):
         sum(res.query_bytes(q).values()) for q in range(NQ))
 
 
+@pytest.mark.parametrize("route_batch", ("union", "lane"))
+def test_pad_lanes_are_fully_dead(route_batch):
+    """Regression (pad-lane seam fix): pad lanes used to *replay query
+    0* — stepping its frontier a second time through the union route
+    pass and burning wire slots for work that was sliced away. Pads now
+    start halted (``query_live=False`` end to end): they never step and
+    are never charged, and the RunResult's dead-pad audit fields prove
+    it — NQ=5 pads into the cap-8 bucket, so exactly 3 pad lanes with
+    zero steps, zero bytes, zero messages (= zero wire slots)."""
+    _, pg, _, prog, queries = problem("sssp:basic")
+    for mode in ("fused", "chunked"):
+        res = Engine(mode=mode, chunk_size=CHUNK,
+                     route_batch=route_batch).run_batch(prog, pg, queries)
+        assert res.num_pad_lanes == 3, (mode, route_batch)
+        assert res.pad_steps == 0, (mode, route_batch)
+        assert res.pad_bytes == 0, (mode, route_batch)
+        assert res.pad_msgs == 0, (mode, route_batch)
+
+
 def test_bucket_queries_pow2():
     assert [bucket_queries(q) for q in (1, 2, 3, 4, 5, 20, 27, 32, 33)] == \
         [1, 2, 4, 4, 8, 32, 32, 32, 64]

@@ -66,6 +66,32 @@ for qi in range(len(queries)):
     assert rb_s.query_bytes(qi) == rb_v.query_bytes(qi), qi
 print("run_batch parity ok:", rb_s.query_steps.tolist(), "steps")
 
+# the serving substrate (per-lane ages, chunk-boundary lane swap) must
+# serve bit-identically on the mesh too — same queries, forced refills
+from repro.pregel.serve import QueryQueue
+
+serve_v = Engine(backend="vmap", mode="chunked", chunk_size=2).serve(
+    prog, pg, QueryQueue.from_queries(queries), num_lanes=2)
+serve_s = Engine(backend="shard_map", mesh=mesh, mode="chunked",
+                 chunk_size=2).serve(
+    prog, pg, QueryQueue.from_queries(queries), num_lanes=2)
+assert len(serve_s.records) == len(queries)
+for rv, rs in zip(serve_v.records, serve_s.records):
+    assert (rs.qid, rs.lane, rs.admitted, rs.finished, rs.steps) == \
+        (rv.qid, rv.lane, rv.admitted, rv.finished, rv.steps), rs.qid
+    np.testing.assert_array_equal(np.asarray(rv.output),
+                                  np.asarray(rs.output))
+    assert rs.bytes_by_channel == rv.bytes_by_channel, rs.qid
+    assert rs.msgs_by_channel == rv.msgs_by_channel, rs.qid
+# and to solo runs on the mesh itself
+eng_s = Engine(backend="shard_map", mesh=mesh)
+for rec in serve_s.records:
+    solo = eng_s.run_batch(prog, pg, [rec.query])
+    np.testing.assert_array_equal(np.asarray(rec.output),
+                                  np.asarray(solo.outputs[0]))
+    assert rec.steps == int(solo.query_steps[0]), rec.qid
+print("serve parity ok:", [r.steps for r in serve_s.records], "steps")
+
 print("SHARDMAP-PARITY-OK")
 ''' % {"keys": KEYS}
 
