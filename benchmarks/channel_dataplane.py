@@ -150,6 +150,7 @@ def run_and_write(scales, repeats: int = 5,
                   out_path: str = "BENCH_channel_dataplane.json"):
     print(f"== Channel data plane (social, scales {list(scales)}) ==")
     out = run(scales, repeats)
+    out["provenance"] = common.provenance()
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

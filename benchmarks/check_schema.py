@@ -18,7 +18,9 @@ import pathlib
 import sys
 
 # Required top-level keys per artifact basename. Append when a benchmark
-# grows a field; never remove without bumping every reader.
+# grows a field; never remove without bumping every reader. Every
+# artifact additionally carries "provenance" (added below): numbers
+# without a device/version stamp can't be compared across PRs.
 EXPECTED = {
     "BENCH_paper_tables.json": {
         "scale", "workers", "rows", "headline", "engine",
@@ -41,7 +43,17 @@ EXPECTED = {
         "scale", "workers", "q", "lanes", "chunk_size", "rate", "seed",
         "mode", "programs", "headline",
     },
+    "BENCH_planner.json": {
+        "workers", "dataset", "scales", "repeats", "programs", "configs",
+        "rows", "headline",
+    },
 }
+for _keys in EXPECTED.values():
+    _keys.add("provenance")
+
+# The provenance stamp itself (written by benchmarks.common.provenance).
+PROVENANCE = {"backend", "device_kind", "device_count", "jax_version",
+              "jaxlib_version", "python_version", "timestamp_utc"}
 
 # Required keys inside nested blocks (artifact basename -> path -> keys).
 NESTED = {
@@ -66,7 +78,14 @@ NESTED = {
                      "p50_latency_s", "p99_latency_s", "target",
                      "meets_target"},
     },
+    "BENCH_planner.json": {
+        "headline": {"scale", "geomean_vs_best", "geomean_vs_worst",
+                     "target_vs_best", "target_vs_worst", "meets_target",
+                     "bit_identical"},
+    },
 }
+for _name in EXPECTED:
+    NESTED.setdefault(_name, {})["provenance"] = PROVENANCE
 
 
 def check(path: pathlib.Path) -> list:

@@ -43,6 +43,30 @@ def partitioned(name: str, scale: int, partitioner: str, build: tuple):
                                   build=build)
 
 
+def provenance() -> dict:
+    """The execution-environment stamp every ``BENCH_*.json`` carries:
+    where and when the numbers were measured (device kind/count, jax and
+    jaxlib versions, UTC timestamp). ``benchmarks.check_schema`` requires
+    it — an artifact without provenance can't be compared across PRs."""
+    import datetime
+    import platform
+
+    import jax
+    import jaxlib
+
+    devs = jax.devices()
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": devs[0].device_kind,
+        "device_count": len(devs),
+        "jax_version": jax.__version__,
+        "jaxlib_version": jaxlib.__version__,
+        "python_version": platform.python_version(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+
+
 def adjusted_runtime(res) -> float:
     """Wall time with step-0 compile overhead replaced by the median."""
     ts = res.step_times_s

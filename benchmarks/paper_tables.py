@@ -162,7 +162,8 @@ def run_and_write(scale: int, out_path: str = "BENCH_paper_tables.json"):
     print(f"== Paper composition tables (scale {scale}, W={common.W}) ==")
     rows, headline, engine_stats = run(scale)
     out = {"scale": scale, "workers": common.W, "rows": rows,
-           "headline": headline, "engine": engine_stats}
+           "headline": headline, "engine": engine_stats,
+           "provenance": common.provenance()}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

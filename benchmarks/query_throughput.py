@@ -130,6 +130,8 @@ def run_and_write(scale: int = 12, q: int = 32, repeats: int = 3,
                   out_path: str = "BENCH_query_throughput.json"):
     print(f"== Query throughput (scale {scale}, W={W}, Q={q}) ==")
     out = run(scale, q, repeats, keys)
+    from benchmarks import common
+    out["provenance"] = common.provenance()
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

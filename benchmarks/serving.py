@@ -200,6 +200,8 @@ def run_and_write(scale: int = 12, q: int = 128, lanes: int = 16,
     print(f"== Serving (scale {scale}, W={W}, Q={q}, lanes={lanes}, "
           f"chunk={chunk}, rate={rate}/step) ==")
     out = run(scale, q, lanes, chunk, rate, seed, keys, repeats)
+    from benchmarks import common
+    out["provenance"] = common.provenance()
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

@@ -85,6 +85,8 @@ def run_and_write(scale: int = 14, repeats: int = 5, chunk_size: int = 8,
     also what benchmarks/run.py calls for the `fusion` table)."""
     print(f"== Superstep fusion (pointer jumping, n=2^{scale}) ==")
     out = run(scale, repeats, chunk_size)
+    from benchmarks import common
+    out["provenance"] = common.provenance()
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"wrote {out_path}")

@@ -53,6 +53,12 @@ python -m benchmarks.routed_batching --scale 10 --queries 4 --repeats 1 \
   --out "$smoke_dir/BENCH_routed_batching.json"
 python -m benchmarks.check_schema "$smoke_dir/BENCH_routed_batching.json"
 
+echo "== channel planner (smoke) =="
+python -m repro plan --explain --scale 9 --workers 4
+python -m benchmarks.planner --scale 10 --repeats 2 \
+  --out "$smoke_dir/BENCH_planner.json"
+python -m benchmarks.check_schema "$smoke_dir/BENCH_planner.json"
+
 echo "== continuous-batching query service (smoke, <60s) =="
 python -m repro serve --smoke
 python -m benchmarks.serving --scale 8 --queries 6 --lanes 2 --chunk 2 \

@@ -22,16 +22,23 @@ Subcommands:
           arrival schedule, verify every served output bit-identical to
           a solo run, and print sustained queries/sec plus p50/p99
           latency. ``--smoke`` is the <60s CI configuration.
+  plan    the channel planner: fingerprint each program on its problem
+          graph, lower the declared channels to a concrete Plan, and
+          print the per-knob decision table (``--explain``) with the
+          predicted vs measured cost of every candidate.
 
 Examples:
 
   python -m repro list
   python -m repro run wcc --scale 9
   python -m repro run sv:composed --scale 10 --mode fused --repeat 2
+  python -m repro run wcc --scale 10 --plan auto
   python -m repro bench --scale 10 --keys wcc:basic,wcc:switch --json out.json
   python -m repro bench-batch --scale 10 --queries 16
   python -m repro serve reach:basic --scale 10 --queries 32 --lanes 8
   python -m repro serve --smoke
+  python -m repro plan --explain
+  python -m repro plan sssp:basic --scale 11 --queries 16 --explain
 """
 from __future__ import annotations
 
@@ -58,6 +65,14 @@ def _summary(res) -> str:
             f"dispatches {res.dispatches}  [{cache}]")
 
 
+def _knob_line(plan) -> str:
+    """The resolved knob set a run actually compiled under."""
+    return (f"knobs: mode={plan.mode} chunk={plan.chunk_size} "
+            f"use_kernel={plan.use_kernel} route_impl={plan.route_impl} "
+            f"route_batch={plan.route_batch} "
+            f"dense_threshold={plan.dense_threshold} [plan: {plan.source}]")
+
+
 def _prepare(spec, args):
     graph = spec.make_graph(args.scale, args.seed)
     pg = pgraph.partition_graph(graph, args.workers, args.partitioner,
@@ -76,6 +91,7 @@ def cmd_list(args) -> int:
                 "variant": s.variant,
                 "default": DEFAULT_VARIANT[s.algorithm] == s.variant,
                 "build": list(s.build),
+                "channel_class": s.channel_class,
                 "channels": list(s.make(s.make_graph(6, 0)).channel_names()),
             }
             for k, s in sorted(REGISTRY.items())
@@ -90,21 +106,25 @@ def cmd_list(args) -> int:
                 continue
             star = "*" if DEFAULT_VARIANT[algo] == spec.variant else " "
             plans = ",".join(spec.build) or "-"
-            print(f"  {star} {key:22s} plans: {plans}")
+            print(f"  {star} {key:22s} [{spec.channel_class:6s}] "
+                  f"plans: {plans}")
     print("\n(* = default variant for `python -m repro run <algorithm>`)")
     return 0
 
 
 def cmd_run(args) -> int:
     spec = resolve(args.program)
+    mode = args.mode or ("auto" if args.plan == "auto" else "fused")
     print(f"== {spec.key} (scale {args.scale}, W={args.workers}, "
-          f"{args.partitioner} partition, mode {args.mode}) ==")
+          f"{args.partitioner} partition, mode {mode}) ==")
     graph, pg, inputs, prog = _prepare(spec, args)
     print(f"graph: n={graph.n} edges={graph.num_edges}  program: {prog}")
-    eng = Engine(mode=args.mode, chunk_size=args.chunk_size)
+    eng = Engine(mode=args.mode, chunk_size=args.chunk_size, plan=args.plan)
     res = None
     for i in range(max(1, args.repeat)):
         res = eng.run(prog, pg, max_steps=args.max_steps)
+        if i == 0:
+            print(_knob_line(res.plan))
         print(f"run {i}: {_summary(res)}")
     if args.repeat > 1:
         print(f"engine session: {eng.stats()}")
@@ -121,20 +141,26 @@ def cmd_bench(args) -> int:
     keys = (args.keys.split(",") if args.keys
             else [f"{a}:{DEFAULT_VARIANT[a]}" for a in ALGORITHMS])
     modes = args.modes.split(",")
-    engines = {m: Engine(mode=m, chunk_size=args.chunk_size) for m in modes}
+    engines = {m: Engine(mode=m, chunk_size=args.chunk_size,
+                         plan=args.plan) for m in modes}
     rows = []
+    shown = set()
     print(f"== bench (scale {args.scale}, W={args.workers}) ==")
     for name in keys:
         spec = resolve(name)
         graph, pg, inputs, prog = _prepare(spec, args)
         for mode in modes:
             res = engines[mode].run(prog, pg, max_steps=args.max_steps)
+            if res.plan.key() not in shown:
+                shown.add(res.plan.key())
+                print(f"  {_knob_line(res.plan)}")
             rows.append({
                 "program": spec.key, "mode": mode, "supersteps": res.steps,
                 "messages": res.total_msgs, "bytes": res.total_bytes,
                 "wall_time_s": round(res.wall_time_s, 4),
                 "compile_time_s": round(res.compile_time_s, 4),
                 "cache_hit": res.cache_hit,
+                "plan": res.plan.to_json(),
             })
             print(f"  {spec.key:22s} [{mode:7s}] {_summary(res)}")
     stats = {m: engines[m].stats() for m in modes}
@@ -244,7 +270,7 @@ def cmd_serve(args) -> int:
     if spec.make_queries is None:
         print(f"serve: {spec.key} has no query axis")
         return 2
-    chunk = args.serve_chunk if args.serve_chunk else args.chunk_size
+    chunk = args.serve_chunk if args.serve_chunk else (args.chunk_size or 64)
     print(f"== serve {spec.key} (scale {args.scale}, W={args.workers}, "
           f"Q={args.queries}, lanes={args.lanes}, chunk={chunk}, "
           f"rate={args.rate}/step) ==")
@@ -280,6 +306,30 @@ def cmd_serve(args) -> int:
     return 0
 
 
+def cmd_plan(args) -> int:
+    from repro.plan import Planner
+
+    keys = (args.programs.split(",") if isinstance(args.programs, str)
+            else args.programs) or ["wcc:switch", "sssp:basic"]
+    planner = Planner(calibrate=not args.no_calibrate)
+    print(f"== plan (scale {args.scale}, W={args.workers}, "
+          f"Q={args.queries}) ==")
+    for name in keys:
+        spec = resolve(name)
+        graph, pg, inputs, prog = _prepare(spec, args)
+        plan = planner.plan(prog, pg, num_queries=args.queries)
+        print(f"\n{spec.key}  (n={graph.n}, edges={graph.num_edges}, "
+              f"class={spec.channel_class})")
+        if args.explain:
+            print(plan.explain())
+        else:
+            print(_knob_line(plan))
+    if not args.no_calibrate:
+        from repro.plan import cost_model
+        print(f"\ncalibration cache: {cost_model.cache_dir()}")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro", description=__doc__,
@@ -296,7 +346,9 @@ def main(argv=None) -> int:
         p.add_argument("--workers", type=int, default=8)
         p.add_argument("--partitioner", default="random",
                        choices=("block", "random", "bfs"))
-        p.add_argument("--chunk-size", type=int, default=64)
+        p.add_argument("--chunk-size", type=int, default=None,
+                       help="chunked-mode dispatch width (default 64; "
+                            "None lets --plan auto choose)")
         p.add_argument("--max-steps", type=int, default=None)
         p.add_argument("--seed", type=int, default=0)
 
@@ -304,8 +356,15 @@ def main(argv=None) -> int:
     p_run.add_argument("program",
                        help="algorithm (default variant) or algorithm:variant")
     common(p_run)
-    p_run.add_argument("--mode", default="fused",
-                       choices=("host", "fused", "chunked"))
+    p_run.add_argument("--mode", default=None,
+                       choices=("host", "fused", "chunked"),
+                       help="execution mode (default: fused, or the "
+                            "planner's choice under --plan auto)")
+    p_run.add_argument("--plan", default="manual",
+                       choices=("manual", "auto"),
+                       help="knob source: manual = flags/env/defaults, "
+                            "auto = the cost-model planner (explicit "
+                            "flags still win)")
     p_run.add_argument("--repeat", type=int, default=1,
                        help="re-run through the same Engine session")
     p_run.add_argument("--no-check", dest="check", action="store_false",
@@ -319,6 +378,10 @@ def main(argv=None) -> int:
     common(p_bench)
     p_bench.add_argument("--modes", default="fused",
                          help="comma list of execution modes")
+    p_bench.add_argument("--plan", default="manual",
+                         choices=("manual", "auto"),
+                         help="knob source (auto = cost-model planner; "
+                              "the per-engine --modes stay explicit)")
     p_bench.add_argument("--json", default=None, help="write rows to JSON")
     p_bench.set_defaults(fn=cmd_bench)
 
@@ -369,6 +432,23 @@ def main(argv=None) -> int:
                       help="the <60s CI configuration (small scale, "
                            "forced refills, full verification)")
     p_sv.set_defaults(fn=cmd_serve)
+
+    p_plan = sub.add_parser(
+        "plan",
+        help="lower programs' channels to concrete Plans (decision table)")
+    p_plan.add_argument("programs", nargs="*", default=None,
+                        help="programs to plan (default: wcc:switch, "
+                             "sssp:basic)")
+    common(p_plan)
+    p_plan.add_argument("--queries", type=int, default=0,
+                        help="plan for a Q-query batch (0 = single run)")
+    p_plan.add_argument("--explain", action="store_true",
+                        help="print the full per-knob decision table "
+                             "(candidates, predicted vs measured cost)")
+    p_plan.add_argument("--no-calibrate", action="store_true",
+                        help="skip the timed calibration probes — corpus "
+                             "fits and defaults only")
+    p_plan.set_defaults(fn=cmd_plan)
 
     args = ap.parse_args(argv)
     return args.fn(args)

@@ -344,6 +344,20 @@ ALGORITHMS: Tuple[str, ...] = tuple(sorted(DEFAULT_VARIANT))
 BATCHED: Tuple[str, ...] = tuple(
     sorted(k for k, s in REGISTRY.items() if s.make_queries is not None))
 
+#: the abstract channel kinds a program may declare — the planner's
+#: decision space (``repro.plan``) is keyed on this family, not on the
+#: concrete channel types a variant happens to instantiate
+CHANNEL_CLASSES: Tuple[str, ...] = ("static", "routed")
+
+
+def channel_class_of(program_name: str) -> str:
+    """The abstract data-plane family a registered program's channels
+    lower from — the registry surface ``repro.plan.features`` consults.
+    Unregistered names default to ``"static"`` (plan-driven channels
+    need no routing decisions, so the default is the inert one)."""
+    spec = REGISTRY.get(program_name)
+    return spec.channel_class if spec is not None else "static"
+
 
 def resolve(name: str) -> ProgramSpec:
     """``"wcc"`` (default variant) or ``"wcc:switch"`` -> ProgramSpec."""

@@ -26,6 +26,8 @@ one-shot wrapper over :class:`repro.pregel.engine.Engine`.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax.numpy as jnp
 
 from repro.core import compose
@@ -41,7 +43,7 @@ VARIANTS = ("basic", "prop", "switch")
 
 
 def program(variant: str = "prop", *, max_steps: int = 10_000,
-            dense_threshold: float = 0.1) -> VertexProgram:
+            dense_threshold: Optional[float] = None) -> VertexProgram:
     """Min-label WCC as a VertexProgram. Output: (n,) component labels in
     old-id space (min member id per component, canonicalized by tests)."""
     if variant not in VARIANTS:
@@ -125,7 +127,7 @@ def program(variant: str = "prop", *, max_steps: int = 10_000,
 
 def run(pg: PartitionedGraph, variant: str = "prop", max_steps: int = 10_000,
         backend: str = "vmap", mesh=None, mode=None, chunk_size: int = 64,
-        dense_threshold: float = 0.1, route_impl=None):
+        dense_threshold: Optional[float] = None, route_impl=None):
     prog = program(variant=variant, max_steps=max_steps,
                    dense_threshold=dense_threshold)
     res = engine.run_program(prog, pg, backend=backend, mesh=mesh, mode=mode,

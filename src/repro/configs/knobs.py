@@ -1,0 +1,111 @@
+"""One generic configuration-knob resolver for the data-plane surface.
+
+Every tunable in this library answers the same question — "which concrete
+implementation does this call site get?" — and every one of them answers
+it with the same precedence ladder, most specific wins:
+
+  1. an **explicit argument** at the call site (``use_kernel=False``);
+  2. the knob's **scope** context manager (how ``Engine(...)`` threads a
+     per-compile choice through a trace — trace-time, wrap the compile,
+     not the execution);
+  3. the knob's **environment variable** (``REPRO_*``);
+  4. the **default** (a value, or a zero-arg callable evaluated at
+     resolve time for backend-dependent defaults).
+
+Before this module the ladder was copy-pasted per knob
+(``kernels/ops.py`` for ``use_kernel``, ``core/routing.py`` twice for
+``route_impl`` / ``route_batch``) — three chances for the precedence to
+drift. A :class:`Knob` is the ladder as one object; the call sites keep
+their public ``resolve_*`` / ``*_scope`` names as thin instance wrappers,
+and the planner (``repro.plan``) enumerates the same instances to know
+what it is allowed to decide.
+
+Choice knobs (``choices=`` set) validate every resolved value and raise
+``ValueError(f"unknown {describe} {value!r} (one of {choices})")`` — the
+exact message the pre-unification resolvers raised, pinned by tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def parse_bool(text: str) -> bool:
+    """Env-var truthiness: ``1/true/yes/on`` (case/space-insensitive)."""
+    return text.strip().lower() in _TRUTHY
+
+
+class Knob:
+    """One configuration knob: explicit > scope > env > default.
+
+    Args:
+      name: the knob's canonical name (what plans/results report it as).
+      env: environment variable consulted at step 3 (empty env values are
+        treated as unset, matching ``os.environ.get(...) or default``).
+      default: the fallback — a value, or a zero-arg callable evaluated
+        per resolve (e.g. ``lambda: jax.default_backend() == "tpu"``).
+      parse: maps the env string to a value (default: identity).
+      coerce: normalizes explicit/scope values (e.g. ``bool``/``float``).
+      choices: optional closed value set; anything outside it raises.
+      describe: noun used in the rejection message (defaults to ``name``).
+    """
+
+    def __init__(self, name: str, *, env: Optional[str] = None,
+                 default: Any = None,
+                 parse: Callable[[str], Any] = lambda text: text,
+                 coerce: Callable[[Any], Any] = lambda value: value,
+                 choices: Optional[Sequence] = None,
+                 describe: Optional[str] = None):
+        self.name = name
+        self.env = env
+        self.default = default
+        self.parse = parse
+        self.coerce = coerce
+        self.choices = None if choices is None else tuple(choices)
+        self.describe = name if describe is None else describe
+        self._override: Any = None
+
+    def check(self, value):
+        if self.choices is not None and value not in self.choices:
+            raise ValueError(
+                f"unknown {self.describe} {value!r} (one of {self.choices})")
+        return value
+
+    def _unset(self, value) -> bool:
+        # None is the universal "not given"; for choice (string) knobs the
+        # empty string also falls through, preserving the historical
+        # ``value or override or env or default`` chaining.
+        return value is None or (self.choices is not None and value == "")
+
+    def resolve(self, value: Any = None):
+        """The knob's value for a call site (see the module ladder)."""
+        if not self._unset(value):
+            return self.check(self.coerce(value))
+        if self._override is not None:
+            return self._override
+        env = os.environ.get(self.env) if self.env else None
+        if env:  # empty string == unset
+            return self.check(self.parse(env))
+        default = self.default() if callable(self.default) else self.default
+        return self.check(self.coerce(default))
+
+    @contextlib.contextmanager
+    def scope(self, value: Any):
+        """Pin the knob for everything resolved under the scope (None
+        clears an outer override back to env/default). Scopes nest; each
+        restores the previous override on exit."""
+        prev = self._override
+        self._override = None if self._unset(value) else self.resolve(value)
+        try:
+            yield
+        finally:
+            self._override = prev
+
+
+def knob_values(knobs: Sequence[Knob]) -> Tuple[Tuple[str, Any], ...]:
+    """Resolve a set of knobs to ``(name, value)`` pairs — the resolved
+    configuration surface as data (what ``repro plan`` prints)."""
+    return tuple((k.name, k.resolve()) for k in knobs)

@@ -43,7 +43,29 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.configs import knobs
 from repro.core.channel import TRAFFIC_DTYPE, ChannelContext, key_under
+
+#: the density-switch threshold knob (explicit > dense_threshold_scope >
+#: REPRO_DENSE_THRESHOLD > 0.1): the frontier fraction at or above which
+#: :func:`density_adaptive_combine` takes the planned dense broadcast.
+#: ``Engine`` threads its planner-chosen threshold through the scope at
+#: compile time, exactly like the use_kernel/route knobs.
+DENSE_THRESHOLD = knobs.Knob(
+    "dense_threshold", env="REPRO_DENSE_THRESHOLD", default=0.1,
+    parse=float, coerce=float)
+
+
+def resolve_dense_threshold(threshold: Optional[float] = None) -> float:
+    """The density-switch threshold for a call site (explicit > scope >
+    env > 0.1 — see ``repro.configs.knobs``)."""
+    return DENSE_THRESHOLD.resolve(threshold)
+
+
+def dense_threshold_scope(threshold: Optional[float]):
+    """Pin the density-switch threshold for every adaptive combine under
+    the scope (trace-time: wrap the compile, not the execution)."""
+    return DENSE_THRESHOLD.scope(threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -279,7 +301,7 @@ def switch_by_density(
     ctx: ChannelContext,
     name: str,
     density,
-    threshold: float,
+    threshold: Optional[float],
     dense_fn: Callable[[ChannelContext], Any],
     sparse_fn: Callable[[ChannelContext], Any],
 ):
@@ -296,8 +318,11 @@ def switch_by_density(
     stats dict anyway); only the chosen branch's traffic is accounted,
     under ``<name>/dense/...`` and ``<name>/sparse/...``, mirroring the
     logical-message accounting used throughout this library.
+
+    ``threshold=None`` resolves through the :data:`DENSE_THRESHOLD` knob
+    at trace time (scope > env > 0.1) — the planner's entry point.
     """
-    use_dense = jnp.asarray(density) >= threshold
+    use_dense = jnp.asarray(density) >= resolve_dense_threshold(threshold)
     d_ctx, s_ctx = child_context(ctx), child_context(ctx)
     d_out = dense_fn(d_ctx)
     s_out = sparse_fn(s_ctx)
@@ -314,7 +339,7 @@ def density_adaptive_combine(
     ctx: ChannelContext,
     name: str,
     density,
-    threshold: float,
+    threshold: Optional[float],
     *,
     plan,
     dense_vals: jax.Array,

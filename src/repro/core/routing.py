@@ -37,15 +37,14 @@ charged: they never reach the wire.
 """
 from __future__ import annotations
 
-import contextlib
 import dataclasses
-import os
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 from jax.custom_batching import custom_vmap
 
+from repro.configs import knobs
 from repro.core.channel import TRAFFIC_DTYPE
 from repro.kernels import ops as kops
 
@@ -53,31 +52,24 @@ BIG = jnp.iinfo(jnp.int32).max
 
 IMPLS = ("bucket", "sort")
 
-_IMPL_OVERRIDE: Optional[str] = None
+#: the routed-exchange implementation knob (explicit > impl_scope >
+#: REPRO_ROUTE_IMPL > "bucket") — see repro.configs.knobs
+ROUTE_IMPL = knobs.Knob(
+    "route_impl", env="REPRO_ROUTE_IMPL", default="bucket",
+    choices=IMPLS, describe="routing impl")
 
 
 def resolve_impl(impl: Optional[str] = None) -> str:
     """The routing implementation for a call site: explicit argument,
     else the :func:`impl_scope` override, else ``REPRO_ROUTE_IMPL``,
     else ``"bucket"``."""
-    impl = impl or _IMPL_OVERRIDE or os.environ.get("REPRO_ROUTE_IMPL")
-    impl = impl or "bucket"
-    if impl not in IMPLS:
-        raise ValueError(f"unknown routing impl {impl!r} (one of {IMPLS})")
-    return impl
+    return ROUTE_IMPL.resolve(impl)
 
 
-@contextlib.contextmanager
 def impl_scope(impl: Optional[str]):
     """Pin the routing impl for every route() under the scope
     (trace-time: wrap the compile, not the execution)."""
-    global _IMPL_OVERRIDE
-    prev = _IMPL_OVERRIDE
-    _IMPL_OVERRIDE = None if impl is None else resolve_impl(impl)
-    try:
-        yield
-    finally:
-        _IMPL_OVERRIDE = prev
+    return ROUTE_IMPL.scope(impl)
 
 
 # --------------------------------------------------------------------------
@@ -86,7 +78,11 @@ def impl_scope(impl: Optional[str]):
 
 BATCH_IMPLS = ("union", "lane")
 
-_BATCH_OVERRIDE: Optional[str] = None
+#: the batched-routing strategy knob (explicit > batch_scope >
+#: REPRO_ROUTE_BATCH > "union") — see repro.configs.knobs
+ROUTE_BATCH = knobs.Knob(
+    "route_batch", env="REPRO_ROUTE_BATCH", default="union",
+    choices=BATCH_IMPLS, describe="route batch strategy")
 
 
 def resolve_batch(batch: Optional[str] = None) -> str:
@@ -102,26 +98,14 @@ def resolve_batch(batch: Optional[str] = None) -> str:
         serial route, i.e. Q independent route passes per superstep.
         Kept as the measured baseline (``benchmarks/routed_batching.py``).
     """
-    batch = batch or _BATCH_OVERRIDE or os.environ.get("REPRO_ROUTE_BATCH")
-    batch = batch or "union"
-    if batch not in BATCH_IMPLS:
-        raise ValueError(
-            f"unknown route batch strategy {batch!r} (one of {BATCH_IMPLS})")
-    return batch
+    return ROUTE_BATCH.resolve(batch)
 
 
-@contextlib.contextmanager
 def batch_scope(batch: Optional[str]):
     """Pin the batched-routing strategy for every routed channel under
     the scope (trace-time: wrap the compile, not the execution) — how
     ``Engine(route_batch=...)`` threads the knob through a compile."""
-    global _BATCH_OVERRIDE
-    prev = _BATCH_OVERRIDE
-    _BATCH_OVERRIDE = None if batch is None else resolve_batch(batch)
-    try:
-        yield
-    finally:
-        _BATCH_OVERRIDE = prev
+    return ROUTE_BATCH.scope(batch)
 
 
 def lane_live(ctx):

@@ -21,49 +21,35 @@ wins:
 """
 from __future__ import annotations
 
-import contextlib
-import os
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.configs import knobs
 from repro.core import combiners as cb
 from repro.kernels import bucket_route as kbucket
 from repro.kernels import ref as kref
 from repro.kernels import segment_combine as kseg
 
-_TRUTHY = ("1", "true", "yes", "on")
-
-# Scope override (None = fall through to env/backend). Set via
-# use_kernel_scope — e.g. around an Engine compile.
-_KERNEL_OVERRIDE: Optional[bool] = None
+#: the kernel-vs-reference knob (explicit > use_kernel_scope >
+#: REPRO_USE_KERNEL > backend default) — see repro.configs.knobs
+USE_KERNEL = knobs.Knob(
+    "use_kernel", env="REPRO_USE_KERNEL",
+    default=lambda: jax.default_backend() == "tpu",
+    parse=knobs.parse_bool, coerce=bool)
 
 
 def resolve_use_kernel(use_kernel: Optional[bool] = None) -> bool:
     """The kernel-vs-reference decision for a call site (see module doc)."""
-    if use_kernel is not None:
-        return bool(use_kernel)
-    if _KERNEL_OVERRIDE is not None:
-        return _KERNEL_OVERRIDE
-    env = os.environ.get("REPRO_USE_KERNEL")
-    if env is not None:
-        return env.strip().lower() in _TRUTHY
-    return jax.default_backend() == "tpu"
+    return USE_KERNEL.resolve(use_kernel)
 
 
-@contextlib.contextmanager
 def use_kernel_scope(use_kernel: Optional[bool]):
     """Pin the kernel decision for every channel call under the scope
     (trace-time: wrap the compile, not the execution)."""
-    global _KERNEL_OVERRIDE
-    prev = _KERNEL_OVERRIDE
-    _KERNEL_OVERRIDE = None if use_kernel is None else bool(use_kernel)
-    try:
-        yield
-    finally:
-        _KERNEL_OVERRIDE = prev
+    return USE_KERNEL.scope(use_kernel)
 
 
 def resolve_interpret(interpret: Optional[bool] = None) -> bool:

@@ -1,0 +1,15 @@
+"""Cost-model-driven channel planning (``Engine(plan="auto")``).
+
+- :mod:`repro.plan.features` — graph/program fingerprints.
+- :mod:`repro.plan.cost_model` — corpus-fitted cost curves + disk-cached
+  calibration probes.
+- :mod:`repro.plan.planner` — :class:`Plan` / :class:`Decision` /
+  :class:`Planner`: abstract channel declarations lowered to the
+  concrete knob assignment one compile runs under.
+"""
+from repro.plan.cost_model import Corpus, CostModel
+from repro.plan.features import Fingerprint, fingerprint
+from repro.plan.planner import Decision, Plan, Planner, manual_plan
+
+__all__ = ["Corpus", "CostModel", "Fingerprint", "fingerprint",
+           "Decision", "Plan", "Planner", "manual_plan"]

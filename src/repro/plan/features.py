@@ -1,0 +1,132 @@
+"""Graph/program fingerprints — the planner's feature extraction.
+
+A :class:`Fingerprint` is everything the cost model is allowed to see:
+the execution substrate (backend / device kind / device count), the
+partitioned graph's static shape surface (worker count, vertex counts,
+edge count, degree statistics, the power-of-two slot caps that actually
+enter compiled shapes), and the program's abstract declaration (its
+data-plane family ``channel_class`` and the query-axis width). Two runs
+with equal fingerprints are — by the same argument as
+``repro.pregel.runtime.graph_signature`` — the same planning problem,
+so the planner memoizes decisions and the calibration cache keys probe
+timings by :func:`Fingerprint.cache_key`.
+
+Degree statistics are rounded to one decimal: they feed *cost-curve
+evaluation*, not compiled shapes, and coarse rounding keeps nearby
+problem instances on one cache entry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.graph.pgraph import PartitionedGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """The planner's view of one (device, graph, program, Q) problem."""
+
+    backend: str          # jax.default_backend()
+    device_kind: str      # e.g. "cpu", "TPU v4"
+    device_count: int
+    workers: int          # logical workers W
+    n: int                # real vertices
+    n_loc: int            # per-worker slot count
+    edges: int            # real directed edges (sum of out-degrees)
+    avg_degree: float     # edges / n, 1 decimal
+    deg_skew: float       # max degree / avg degree, 1 decimal
+    caps: Tuple[Tuple[str, int], ...]  # plan slot caps present (sorted)
+    m_cap: int            # per-worker routed message bound (max raw e_cap)
+    channel_class: str    # "static" | "routed" (ProgramSpec.channel_class)
+    num_queries: int      # query-axis width (0 = unbatched)
+
+    def cache_key(self) -> str:
+        """Stable content hash — the calibration-cache file name."""
+        blob = json.dumps(dataclasses.asdict(self), sort_keys=True)
+        return hashlib.sha1(blob.encode()).hexdigest()[:16]
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, data: dict) -> "Fingerprint":
+        data = dict(data)
+        data["caps"] = tuple((str(k), int(v)) for k, v in data["caps"])
+        return cls(**data)
+
+
+def channel_class_of(prog) -> str:
+    """The program's abstract data-plane family: the registry's
+    ``channel_class`` when the program is registered (programs name
+    themselves ``algorithm:variant``, the registry key), else the
+    program's own ``meta`` hint, else ``"static"``."""
+    meta = getattr(prog, "meta", None) or {}
+    if "channel_class" in meta:
+        return meta["channel_class"]
+    # lazy: algorithms imports the engine, which imports this module
+    from repro.algorithms import channel_class_of as registry_class
+
+    return registry_class(getattr(prog, "name", ""))
+
+
+def _plan_caps(pg: PartitionedGraph) -> Tuple[Tuple[str, int], ...]:
+    caps = {}
+    for field in ("scatter_out", "scatter_in"):
+        plan = getattr(pg, field)
+        if plan is not None:
+            caps[f"{field}.e_cap"] = plan.e_cap
+            caps[f"{field}.u_cap"] = plan.u_cap
+            caps[f"{field}.slot_cap"] = plan.slot_cap
+    for field in ("prop_out", "prop_in"):
+        plan = getattr(pg, field)
+        if plan is not None:
+            caps[f"{field}.ei_cap"] = plan.ei_cap
+            caps[f"{field}.cut.e_cap"] = plan.cut.e_cap
+            caps[f"{field}.cut.slot_cap"] = plan.cut.slot_cap
+    for field in ("raw_out", "raw_in"):
+        plan = getattr(pg, field)
+        if plan is not None:
+            caps[f"{field}.e_cap"] = plan.e_cap
+    return tuple(sorted(caps.items()))
+
+
+def fingerprint(prog, pg: PartitionedGraph,
+                num_queries: int = 0,
+                backend: Optional[str] = None) -> Fingerprint:
+    """Extract the planning fingerprint of running ``prog`` on ``pg``.
+
+    Cheap (two device reductions over ``deg_out``) and side-effect free:
+    no compile-cache entries, no stats counters — the extraction itself
+    never touches the Engine.
+    """
+    deg = np.asarray(pg.deg_out)
+    mask = np.asarray(pg.v_mask)
+    edges = int(deg.sum())
+    n = int(mask.sum())
+    avg = edges / max(n, 1)
+    max_deg = int(deg.max(initial=0))
+    caps = _plan_caps(pg)
+    raw_caps = [v for k, v in caps if k.startswith("raw_") and
+                k.endswith("e_cap")]
+    dev = jax.devices()[0]
+    return Fingerprint(
+        backend=backend or jax.default_backend(),
+        device_kind=str(getattr(dev, "device_kind", dev.platform)),
+        device_count=jax.device_count(),
+        workers=pg.num_workers,
+        n=n,
+        n_loc=pg.n_loc,
+        edges=edges,
+        avg_degree=round(avg, 1),
+        deg_skew=round(max_deg / max(avg, 1e-9), 1),
+        caps=caps,
+        m_cap=max(raw_caps, default=pg.n_loc),
+        channel_class=channel_class_of(prog),
+        num_queries=int(num_queries),
+    )

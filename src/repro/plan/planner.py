@@ -1,0 +1,335 @@
+"""The planner: abstract channel declarations -> one concrete ``Plan``.
+
+A program declares *what* its channels do (the registry's
+``channel_class``, the graph plans it needs); the planner decides *how*
+each declaration is lowered, producing a :class:`Plan` — the full knob
+assignment ``(mode, chunk_size, use_kernel, route_impl, route_batch,
+dense_threshold)`` plus one :class:`Decision` record per knob with the
+candidate costs that justified it. ``Engine(plan="auto")`` resolves a
+Plan per (program, graph shape, Q), folds it into the compile-cache key,
+and stamps it on ``RunResult.plan``; ``python -m repro plan --explain``
+prints the decision table.
+
+Guarantees:
+
+- **Determinism**: equal fingerprints -> equal plans, across processes,
+  calibration cache warm or cold. Probe-informed decisions only pick
+  between candidates whose measured margins are large (bucket-vs-sort
+  ~2x, kernel-vs-reference ~20x on CPU); the density threshold is fitted
+  purely from the committed corpus.
+- **Explicit wins**: any knob the caller set (an ``Engine(...)``
+  argument, a CLI flag) is taken verbatim and recorded with source
+  ``"explicit"`` — the planner never overrides a human.
+- **Bit-identity**: a Plan only selects among implementations that are
+  already proven output-identical (the routed exchange contracts, the
+  kernel-vs-reference parity tests), so a planned run's output equals
+  the hand-set run with the same knobs, bit for bit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+
+from repro.plan import cost_model as cm
+from repro.plan import features
+
+KNOBS = ("mode", "chunk_size", "use_kernel", "route_impl", "route_batch",
+         "dense_threshold")
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One planned knob: what was chosen, on what evidence.
+
+    candidates: ``(name, predicted_s, measured_s)`` tuples (costs may be
+    None when a source had no evidence for that candidate).
+    """
+
+    knob: str
+    chosen: Any
+    source: str = "planner"   # "planner" | "explicit" | "default"
+    candidates: Tuple[Tuple[str, Optional[float], Optional[float]], ...] = ()
+    reason: str = ""
+
+    def to_json(self) -> dict:
+        return {"knob": self.knob, "chosen": self.chosen,
+                "source": self.source,
+                "candidates": [list(c) for c in self.candidates],
+                "reason": self.reason}
+
+    @classmethod
+    def from_json(cls, data: dict) -> "Decision":
+        return cls(knob=data["knob"], chosen=data["chosen"],
+                   source=data["source"],
+                   candidates=tuple(
+                       (c[0], c[1], c[2]) for c in data["candidates"]),
+                   reason=data.get("reason", ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """A concrete lowering of every declared channel: the full knob
+    assignment one Engine compile runs under. Hashable and static — it
+    enters the Engine compile-cache key via :meth:`key` and is stamped
+    on ``RunResult.plan``."""
+
+    mode: str = "fused"
+    chunk_size: int = 64
+    use_kernel: bool = False
+    route_impl: str = "bucket"
+    route_batch: str = "union"
+    dense_threshold: float = 0.1
+    source: str = "manual"    # "manual" | "auto" | "given"
+    fingerprint: Optional[features.Fingerprint] = None
+    decisions: Tuple[Decision, ...] = ()
+
+    def key(self) -> Tuple:
+        """The hashable knob tuple a compile is cached under."""
+        return (self.mode, self.chunk_size, self.use_kernel,
+                self.route_impl, self.route_batch, self.dense_threshold)
+
+    def knobs(self) -> Dict[str, Any]:
+        return {k: getattr(self, k) for k in KNOBS}
+
+    def decision(self, knob: str) -> Optional[Decision]:
+        for d in self.decisions:
+            if d.knob == knob:
+                return d
+        return None
+
+    # -- serialization (RunResult.plan must round-trip through JSON) ------
+
+    def to_json(self) -> dict:
+        return {
+            **self.knobs(),
+            "source": self.source,
+            "fingerprint": (None if self.fingerprint is None
+                            else self.fingerprint.to_json()),
+            "decisions": [d.to_json() for d in self.decisions],
+        }
+
+    @classmethod
+    def from_json(cls, data) -> "Plan":
+        if isinstance(data, str):
+            data = json.loads(data)
+        return cls(
+            mode=data["mode"], chunk_size=int(data["chunk_size"]),
+            use_kernel=bool(data["use_kernel"]),
+            route_impl=data["route_impl"], route_batch=data["route_batch"],
+            dense_threshold=float(data["dense_threshold"]),
+            source=data.get("source", "given"),
+            fingerprint=(None if data.get("fingerprint") is None
+                         else features.Fingerprint.from_json(
+                             data["fingerprint"])),
+            decisions=tuple(Decision.from_json(d)
+                            for d in data.get("decisions", ())),
+        )
+
+    # -- presentation ------------------------------------------------------
+
+    def explain(self) -> str:
+        """The decision table ``repro plan --explain`` prints: one row
+        per knob with the chosen value, its source, and the predicted vs
+        measured cost of every candidate."""
+        fmt = lambda v: "-" if v is None else f"{v * 1e3:9.3f}ms"
+        lines = [f"plan [{self.source}]"
+                 + (f"  fingerprint {self.fingerprint.cache_key()}"
+                    if self.fingerprint else "")]
+        header = (f"  {'knob':16s} {'chosen':10s} {'source':9s} "
+                  f"{'candidate':10s} {'predicted':>11s} {'measured':>11s}")
+        lines += [header, "  " + "-" * (len(header) - 2)]
+        for knob in KNOBS:
+            dec = self.decision(knob)
+            chosen = getattr(self, knob)
+            if dec is None or not dec.candidates:
+                lines.append(f"  {knob:16s} {str(chosen):10s} "
+                             f"{(dec.source if dec else 'manual'):9s}")
+                if dec and dec.reason:
+                    lines.append(f"    ^ {dec.reason}")
+                continue
+            chosen_name = str(chosen)
+            if knob == "use_kernel":
+                chosen_name = "kernel" if chosen else "reference"
+            first = True
+            for name, pred, meas in dec.candidates:
+                head = (f"  {knob:16s} {str(chosen):10s} {dec.source:9s}"
+                        if first else f"  {'':16s} {'':10s} {'':9s}")
+                mark = "*" if name == chosen_name else " "
+                lines.append(f"{head} {mark}{name:9s} {fmt(pred):>11s} "
+                             f"{fmt(meas):>11s}")
+                first = False
+            if dec.reason:
+                lines.append(f"    ^ {dec.reason}")
+        return "\n".join(lines)
+
+
+# Plans are all-static: register so a Plan may ride through jit-adjacent
+# plumbing (pytree flatten treats it as a leafless constant).
+try:
+    jax.tree_util.register_static(Plan)
+    jax.tree_util.register_static(Decision)
+    jax.tree_util.register_static(features.Fingerprint)
+except (AttributeError, ValueError):  # older jax or double-registration
+    pass
+
+
+def manual_plan(*, mode: str = "fused", chunk_size: int = 64,
+                use_kernel: Optional[bool] = None,
+                route_impl: Optional[str] = None,
+                route_batch: Optional[str] = None,
+                dense_threshold: Optional[float] = None,
+                explicit: Dict[str, Any] = None) -> Plan:
+    """The hand-set path as a Plan: resolve every knob through its own
+    config ladder (explicit > scope > env > default) and record where
+    each value came from — what ``Engine(plan="manual")`` stamps."""
+    from repro.core import compose, routing
+    from repro.kernels import ops as kops
+
+    explicit = explicit or {}
+    values = {
+        "mode": mode,
+        "chunk_size": chunk_size,
+        "use_kernel": kops.resolve_use_kernel(use_kernel),
+        "route_impl": routing.resolve_impl(route_impl),
+        "route_batch": routing.resolve_batch(route_batch),
+        "dense_threshold": compose.resolve_dense_threshold(dense_threshold),
+    }
+    decisions = tuple(
+        Decision(knob=k, chosen=values[k],
+                 source="explicit" if explicit.get(k) is not None
+                 else "default",
+                 reason="" if explicit.get(k) is not None
+                 else "config ladder (scope > env > default)")
+        for k in KNOBS)
+    return Plan(source="manual", decisions=decisions, **values)
+
+
+class Planner:
+    """Fingerprint -> Plan, memoized. One planner per Engine."""
+
+    def __init__(self, calibrate: bool = True,
+                 corpus: Optional[cm.Corpus] = None):
+        self.calibrate = calibrate
+        self._corpus = corpus
+        self._memo: Dict[Tuple, Plan] = {}
+
+    @property
+    def corpus(self) -> cm.Corpus:
+        if self._corpus is None:
+            self._corpus = cm.Corpus.load()
+        return self._corpus
+
+    def plan(self, prog, pg, num_queries: int = 0,
+             overrides: Optional[Dict[str, Any]] = None) -> Plan:
+        """Lower ``prog``-on-``pg`` (Q query lanes) to a concrete Plan.
+
+        overrides: explicitly-set knob values (None entries ignored) —
+        taken verbatim, recorded with source "explicit".
+        """
+        overrides = {k: v for k, v in (overrides or {}).items()
+                     if v is not None}
+        fp = features.fingerprint(prog, pg, num_queries=num_queries)
+        memo_key = (fp, tuple(sorted(overrides.items())))
+        hit = self._memo.get(memo_key)
+        if hit is not None:
+            return hit
+        plan = self._decide(fp, overrides)
+        self._memo[memo_key] = plan
+        return plan
+
+    # -- the decision procedure -------------------------------------------
+
+    def _decide(self, fp: features.Fingerprint,
+                overrides: Dict[str, Any]) -> Plan:
+        model = cm.CostModel.build(fp, calibrate_probes=self.calibrate,
+                                   corpus=self.corpus)
+        values: Dict[str, Any] = {}
+        decisions = []
+
+        def decide(knob, chosen, candidates=(), reason=""):
+            if knob in overrides:
+                decisions.append(Decision(
+                    knob=knob, chosen=overrides[knob], source="explicit",
+                    candidates=tuple(candidates),
+                    reason="caller-set knob — planner does not override"))
+                values[knob] = overrides[knob]
+            else:
+                decisions.append(Decision(
+                    knob=knob, chosen=chosen, source="planner",
+                    candidates=tuple(candidates), reason=reason))
+                values[knob] = chosen
+
+        def pick(costs, names):
+            """argmin by measured cost when both candidates were probed,
+            else by predicted cost; returns (winner, cands, basis)."""
+            cands = tuple(
+                (n, costs[n]["predicted"], costs[n]["measured"])
+                for n in names)
+            by_meas = {n: costs[n]["measured"] for n in names}
+            by_pred = {n: costs[n]["predicted"] for n in names}
+            if all(v is not None for v in by_meas.values()):
+                basis, table = "measured probe", by_meas
+            elif all(v is not None for v in by_pred.values()):
+                basis, table = "corpus fit", by_pred
+            else:
+                return None, cands, None
+            return min(table, key=table.get), cands, basis
+
+        # mode / chunk_size: the fused while_loop amortizes per-superstep
+        # dispatch (BENCH_superstep_fusion) — always the planned default;
+        # chunked/host remain caller choices (serving, step inspection).
+        decide("mode", "fused", reason=(
+            "fused while_loop amortizes per-superstep dispatch overhead "
+            "(BENCH_superstep_fusion)"))
+        decide("chunk_size", 64, reason=(
+            "inert under mode='fused'; 64 balances dispatch amortization "
+            "vs halt-check latency for chunked/serve substrates"))
+
+        # use_kernel: combine-probe argmin (ref on CPU where the Pallas
+        # kernel runs interpreted; the kernel on TPU where it lowers)
+        winner, cands, basis = pick(model.combine_costs(),
+                                    ("reference", "kernel"))
+        if winner is None:
+            from repro.kernels import ops as kops
+
+            decide("use_kernel", kops.resolve_use_kernel(None),
+                   candidates=cands,
+                   reason="no cost evidence — backend default")
+        else:
+            decide("use_kernel", winner == "kernel", candidates=cands,
+                   reason=f"cheaper segment combine at e_cap ({basis})")
+
+        # route_impl: route-probe argmin (bucket's one-pass counting sort
+        # beats the argsort baseline ~2x at this library's worker counts)
+        winner, cands, basis = pick(model.route_costs(), ("bucket", "sort"))
+        if winner is None:
+            decide("route_impl", "bucket", candidates=cands,
+                   reason="no cost evidence — library default")
+        else:
+            decide("route_impl", winner, candidates=cands,
+                   reason=f"cheaper routed exchange at m_cap ({basis})")
+
+        # route_batch: only live for Q>1 routed programs; the corpus
+        # union-vs-lane geomean is the prior
+        prior = model.union_prior()
+        if fp.num_queries > 1 and fp.channel_class == "routed":
+            chosen = "union" if (prior or 1.0) >= 1.0 else "lane"
+            decide("route_batch", chosen, candidates=(
+                ("union", None, None), ("lane", None, None)),
+                reason=(f"corpus union-vs-lane geomean "
+                        f"{prior:.2f}x across routed programs"
+                        if prior else "library default (no corpus)"))
+        else:
+            decide("route_batch", "union", reason=(
+                "inert: no routed channels under a query batch "
+                f"(Q={fp.num_queries}, class={fp.channel_class!r})"))
+
+        # dense_threshold: the corpus-fitted switch crossing
+        thr, reason = model.dense_threshold()
+        decide("dense_threshold", thr, reason=reason)
+
+        return Plan(source="auto", fingerprint=fp,
+                    decisions=tuple(decisions), **values)

@@ -33,14 +33,16 @@ their slot caps).
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import routing
+from repro.core import compose, routing
 from repro.graph.pgraph import PartitionedGraph
 from repro.kernels import ops as kops
+from repro.plan import planner as planning
 from repro.pregel import runtime
 from repro.pregel import serve as serving
 from repro.pregel.program import VertexProgram
@@ -63,27 +65,49 @@ class Engine:
 
     def __init__(self, backend: str = "vmap",
                  mesh: Optional[jax.sharding.Mesh] = None,
-                 mode: Optional[str] = None, chunk_size: int = 64,
+                 mode: Optional[str] = None,
+                 chunk_size: Optional[int] = None,
                  use_kernel: Optional[bool] = None,
                  route_impl: Optional[str] = None,
-                 route_batch: Optional[str] = None):
-        if mode is None:
-            mode = "fused"
-        if mode not in ("fused", "chunked", "host"):
+                 route_batch: Optional[str] = None,
+                 dense_threshold: Optional[float] = None,
+                 plan: Any = "manual"):
+        if mode is not None and mode not in ("fused", "chunked", "host"):
             raise ValueError(f"unknown execution mode {mode!r}")
+        if not (plan in ("manual", "auto")
+                or isinstance(plan, planning.Plan)):
+            raise ValueError(
+                f"unknown plan {plan!r} (one of ('manual', 'auto') or a "
+                "repro.plan.Plan)")
         self.backend = backend
         self.mesh = mesh
-        self.mode = mode
-        self.chunk_size = chunk_size
+        # which knobs the caller set explicitly — they win over any plan
+        # (the planner records them with source "explicit")
+        self._explicit = {
+            "mode": mode, "chunk_size": chunk_size,
+            "use_kernel": use_kernel, "route_impl": route_impl,
+            "route_batch": route_batch, "dense_threshold": dense_threshold,
+        }
+        self.mode = "fused" if mode is None else mode
+        self.chunk_size = 64 if chunk_size is None else chunk_size
         # data-plane knobs, resolved once per engine (None = env/backend
-        # default — see repro.kernels.ops / repro.core.routing) and part
-        # of every cache key: a kernel-path loop and a reference-path
-        # loop are different executables.
+        # default — see repro.configs.knobs) and part of every cache key:
+        # a kernel-path loop and a reference-path loop are different
+        # executables.
         self.use_kernel = kops.resolve_use_kernel(use_kernel)
         self.route_impl = routing.resolve_impl(route_impl)
         # how routed channels batch the query axis in run_batch compiles
         # ("union" = shared union-frontier route pass, "lane" = per-lane)
         self.route_batch = routing.resolve_batch(route_batch)
+        self.dense_threshold = compose.resolve_dense_threshold(
+            dense_threshold)
+        # plan policy: "manual" = the resolved knobs above, verbatim;
+        # "auto" = the cost-model planner decides per (program, graph
+        # shape, Q); a Plan instance = use it (explicit knobs still win)
+        self.plan_policy = plan
+        self._planner = (planning.Planner()
+                         if plan == "auto" else None)
+        self._manual_plan: Optional[planning.Plan] = None
         self._cache: Dict[Tuple, runtime.CompiledSupersteps] = {}
         self.compiles = 0
         self.cache_hits = 0
@@ -99,6 +123,49 @@ class Engine:
         return {"compiles": self.compiles, "cache_hits": self.cache_hits,
                 "cached_executables": self.cache_size, "runs": self.runs}
 
+    # -- planning ---------------------------------------------------------
+
+    def resolve_plan(self, prog: VertexProgram, pg: PartitionedGraph,
+                     num_queries: int = 0) -> planning.Plan:
+        """The Plan a compile of ``prog`` on ``pg`` (Q query lanes) runs
+        under, per the engine's plan policy. Explicit constructor knobs
+        win under every policy; ``"auto"`` consults the cost-model
+        planner (calibration probes cached on disk — never in this
+        engine's compile cache, never in ``stats()``)."""
+        if self.plan_policy == "auto":
+            overrides = {k: getattr(self, k)
+                         for k, raw in self._explicit.items()
+                         if raw is not None}
+            return self._planner.plan(prog, pg, num_queries=num_queries,
+                                      overrides=overrides)
+        if isinstance(self.plan_policy, planning.Plan):
+            return self._given_plan()
+        if self._manual_plan is None:
+            self._manual_plan = planning.manual_plan(
+                mode=self.mode, chunk_size=self.chunk_size,
+                use_kernel=self.use_kernel, route_impl=self.route_impl,
+                route_batch=self.route_batch,
+                dense_threshold=self.dense_threshold,
+                explicit=self._explicit)
+        return self._manual_plan
+
+    def _given_plan(self) -> planning.Plan:
+        """A caller-supplied Plan instance, with any explicit constructor
+        knobs replacing the plan's choices (explicit still wins)."""
+        base = self.plan_policy
+        over = {k: getattr(self, k) for k, raw in self._explicit.items()
+                if raw is not None}
+        if not over:
+            return base
+        decisions = tuple(
+            planning.Decision(
+                knob=d.knob, chosen=over[d.knob], source="explicit",
+                candidates=d.candidates,
+                reason="engine-constructor knob overrides the given plan")
+            if d.knob in over else d
+            for d in base.decisions)
+        return dataclasses.replace(base, decisions=decisions, **over)
+
     # -- execution --------------------------------------------------------
 
     def _compile_cached(self, prog: VertexProgram, pg: PartitionedGraph,
@@ -107,14 +174,18 @@ class Engine:
                         serve_chunk: Optional[int] = None):
         """The one cache-lookup path (run, run_batch, and serve share it,
         so a new config knob lands in every key or none): return
-        ``(exe, hit)`` and bump the session counters.
+        ``(exe, hit, plan)`` and bump the session counters. The resolved
+        Plan's knob tuple IS the configuration part of the cache key — a
+        planner choice and the identical hand-set choice share one
+        executable.
 
         ``serve_chunk`` selects the serving substrate: a chunked scan at
-        that chunk size with per-lane ages, regardless of the engine's
-        own mode (the serve loop drives dispatches itself).
+        that chunk size with per-lane ages, regardless of the plan's
+        mode (the serve loop drives dispatches itself).
         """
-        key = (prog, ms, co, self.use_kernel, self.route_impl,
-               self.route_batch,
+        plan = self.resolve_plan(prog, pg,
+                                 num_queries=(num_queries or 0))
+        key = (prog, ms, co, plan.key(),
                runtime.graph_signature(pg),
                runtime.state_signature(state0)) + key_extra
         exe = self._cache.get(key)
@@ -122,14 +193,16 @@ class Engine:
         if not hit:
             # compile_supersteps/execute scrub the graph themselves, so
             # any graph with this signature replays the executable
-            mode = self.mode if serve_chunk is None else "chunked"
-            chunk = self.chunk_size if serve_chunk is None else serve_chunk
+            mode = plan.mode if serve_chunk is None else "chunked"
+            chunk = plan.chunk_size if serve_chunk is None else serve_chunk
             exe = runtime.compile_supersteps(
                 pg, prog.step, state0, max_steps=ms, backend=self.backend,
                 mesh=self.mesh, check_overflow=co, mode=mode,
                 chunk_size=chunk, channels=prog.channels,
-                use_kernel=self.use_kernel, route_impl=self.route_impl,
-                route_batch=self.route_batch, num_queries=num_queries,
+                use_kernel=plan.use_kernel, route_impl=plan.route_impl,
+                route_batch=plan.route_batch,
+                dense_threshold=plan.dense_threshold,
+                num_queries=num_queries,
                 serve=serve_chunk is not None,
             )
             self._cache[key] = exe
@@ -137,15 +210,16 @@ class Engine:
         else:
             self.cache_hits += 1
         self.runs += 1
-        return exe, hit
+        return exe, hit, plan
 
     def _stamp(self, res: runtime.RunResult, prog: VertexProgram,
-               exe: runtime.CompiledSupersteps,
-               hit: bool) -> runtime.RunResult:
+               exe: runtime.CompiledSupersteps, hit: bool,
+               plan: Optional[planning.Plan] = None) -> runtime.RunResult:
         if not hit:
             res.compile_time_s = exe.compile_time_s
         res.program = prog.name
         res.cache_hit = hit
+        res.plan = plan
         res.engine_compiles = self.compiles
         res.engine_cache_hits = self.cache_hits
         return res
@@ -163,8 +237,8 @@ class Engine:
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
         state0 = prog.init(pg)
-        exe, hit = self._compile_cached(prog, pg, state0, ms, co)
-        res = self._stamp(exe.execute(pg, state0), prog, exe, hit)
+        exe, hit, plan = self._compile_cached(prog, pg, state0, ms, co)
+        res = self._stamp(exe.execute(pg, state0), prog, exe, hit, plan)
         res.output = prog.extract(pg, res.state)
         return res
 
@@ -214,13 +288,13 @@ class Engine:
 
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
-        exe, hit = self._compile_cached(prog, pg, state0, ms, co,
-                                        key_extra=("batch", cap),
-                                        num_queries=cap)
+        exe, hit, plan = self._compile_cached(prog, pg, state0, ms, co,
+                                              key_extra=("batch", cap),
+                                              num_queries=cap)
         # the executor slices every per-query view/total/error to the Q
         # real lanes; only the raw carried state keeps the padded width
         res = self._stamp(exe.execute(pg, state0, num_real_queries=q),
-                          prog, exe, hit)
+                          prog, exe, hit, plan)
         res.outputs = [
             prog.extract(pg, jax.tree_util.tree_map(
                 lambda leaf, _qi=qi: leaf[:, _qi], res.state))
@@ -282,7 +356,7 @@ class Engine:
         state0 = jax.tree_util.tree_map(
             lambda leaf: jnp.repeat(leaf[:, None], num_lanes, axis=1),
             template)
-        exe, hit = self._compile_cached(
+        exe, hit, plan = self._compile_cached(
             prog, pg, state0, ms, co,
             key_extra=("serve", num_lanes, chunk),
             num_queries=num_lanes, serve_chunk=chunk)
@@ -290,6 +364,7 @@ class Engine:
                                  chunk, ms, co)
         res.program = prog.name
         res.route_batch = exe.route_batch
+        res.plan = plan
         res.cache_hit = hit
         if not hit:
             res.compile_time_s = exe.compile_time_s

@@ -65,6 +65,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregator
+from repro.core import compose
 from repro.core import routing
 from repro.core.channel import ChannelContext, ChannelRegistry, key_under
 from repro.graph.pgraph import PartitionedGraph
@@ -107,6 +108,10 @@ class RunResult:
     use_kernel: bool = False
     route_impl: str = ""
     route_batch: str = ""
+    # The full planned configuration the Engine compiled under (a
+    # repro.plan.Plan — knobs, source, fingerprint, decision records;
+    # JSON via plan.to_json()). None for plain run_supersteps calls.
+    plan: Any = None
     # Batched-query metadata (num_queries > 0 iff the loop carried a
     # query axis). The per-query arrays are host numpy, length Q;
     # bytes_by_channel/msgs_by_channel hold the across-query totals.
@@ -244,6 +249,7 @@ class CompiledSupersteps:
     use_kernel: bool = False
     route_impl: str = "bucket"
     route_batch: str = "union"
+    dense_threshold: float = 0.1
     # query-axis width the loop was lowered with (None = unbatched)
     num_queries: Optional[int] = None
     # serving substrate (compile_supersteps(serve=True)): the chunked
@@ -315,6 +321,7 @@ def compile_supersteps(
     use_kernel: Optional[bool] = None,
     route_impl: Optional[str] = None,
     route_batch: Optional[str] = None,
+    dense_threshold: Optional[float] = None,
     num_queries: Optional[int] = None,
     serve: bool = False,
 ) -> CompiledSupersteps:
@@ -469,14 +476,14 @@ def compile_supersteps(
     resolved_kernel = kops.resolve_use_kernel(use_kernel)
     resolved_route = routing.resolve_impl(route_impl)
     resolved_batch = routing.resolve_batch(route_batch)
+    resolved_thresh = compose.resolve_dense_threshold(dense_threshold)
     # the data-plane choice is baked in at trace time: every channel call
     # that did not pass an explicit argument resolves through these scopes
     with kops.use_kernel_scope(resolved_kernel), \
             routing.impl_scope(resolved_route), \
-            routing.batch_scope(resolved_batch):
+            routing.batch_scope(resolved_batch), \
+            compose.dense_threshold_scope(resolved_thresh):
         if channels is not None:
-            from repro.core import compose
-
             names = compose.channel_names_of(channels)
             # the mapped step's per-step stat leaf is (W,) under vmap (one
             # scalar per logical worker) and () under shard_map (replicated);
@@ -567,6 +574,7 @@ def compile_supersteps(
         use_kernel=resolved_kernel,
         route_impl=resolved_route,
         route_batch=resolved_batch,
+        dense_threshold=resolved_thresh,
         num_queries=num_queries,
         serve=serve,
     )

@@ -189,6 +189,10 @@ class ServeResult:
     compile_time_s: float = 0.0
     engine_compiles: int = 0
     engine_cache_hits: int = 0
+    # the planned configuration the serving loop compiled under
+    # (repro.plan.Plan; data-plane knobs only — the serve substrate pins
+    # mode/chunk itself)
+    plan: Any = None
 
     @property
     def outputs(self) -> List[Any]:
