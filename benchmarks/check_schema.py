@@ -47,6 +47,10 @@ EXPECTED = {
         "workers", "dataset", "scales", "repeats", "programs", "configs",
         "rows", "headline",
     },
+    "BENCH_resilience.json": {
+        "scale", "workers", "seed", "escalation", "checkpoint",
+        "quarantine", "headline",
+    },
 }
 for _keys in EXPECTED.values():
     _keys.add("provenance")
@@ -82,6 +86,11 @@ NESTED = {
         "headline": {"scale", "geomean_vs_best", "geomean_vs_worst",
                      "target_vs_best", "target_vs_worst", "meets_target",
                      "bit_identical"},
+    },
+    "BENCH_resilience.json": {
+        "headline": {"escalate_bit_identical", "resume_bit_identical",
+                     "quarantine_isolated", "escalation_retries",
+                     "checkpoint_overhead_frac", "target", "meets_target"},
     },
 }
 for _name in EXPECTED:

@@ -64,4 +64,13 @@ python -m repro serve --smoke
 python -m benchmarks.serving --scale 8 --queries 6 --lanes 2 --chunk 2 \
   --keys reach:basic --out "$smoke_dir/BENCH_serving.json"
 python -m benchmarks.check_schema "$smoke_dir/BENCH_serving.json"
+
+echo "== resilience: fault injection + checkpoint/resume (smoke) =="
+python -m repro run wcc:basic --scale 9 --chunk-size 2 \
+  --checkpoint-every 2 --checkpoint-dir "$smoke_dir/ckpt"
+python -m repro run wcc:basic --scale 9 --chunk-size 2 \
+  --resume "$smoke_dir/ckpt"
+python -m benchmarks.resilience --scale 9 \
+  --out "$smoke_dir/BENCH_resilience.json"
+python -m benchmarks.check_schema "$smoke_dir/BENCH_resilience.json"
 echo "tier1: all stages pass"

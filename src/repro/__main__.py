@@ -114,18 +114,44 @@ def cmd_list(args) -> int:
 
 def cmd_run(args) -> int:
     spec = resolve(args.program)
-    mode = args.mode or ("auto" if args.plan == "auto" else "fused")
+    mode = args.mode
+    if mode is None and (args.checkpoint_every or args.resume):
+        mode = "chunked"    # checkpointing snapshots the chunked carry
+    if mode is None:
+        mode = None if args.plan == "auto" else "fused"
+    shown_mode = mode or "auto"
     print(f"== {spec.key} (scale {args.scale}, W={args.workers}, "
-          f"{args.partitioner} partition, mode {mode}) ==")
+          f"{args.partitioner} partition, mode {shown_mode}) ==")
     graph, pg, inputs, prog = _prepare(spec, args)
     print(f"graph: n={graph.n} edges={graph.num_edges}  program: {prog}")
-    eng = Engine(mode=args.mode, chunk_size=args.chunk_size, plan=args.plan)
+    eng = Engine(mode=mode, chunk_size=args.chunk_size, plan=args.plan,
+                 on_overflow=args.on_overflow)
+    resume = args.resume
+    if resume:
+        import os
+        if os.path.isdir(resume):
+            from repro.pregel import checkpoint as ckpt_io
+            resume = ckpt_io.latest(resume)
+        if resume is None or not os.path.exists(resume):
+            print(f"run: no checkpoint at {args.resume}")
+            return 2
+        print(f"resuming from {resume}")
     res = None
     for i in range(max(1, args.repeat)):
-        res = eng.run(prog, pg, max_steps=args.max_steps)
+        res = eng.run(prog, pg, max_steps=args.max_steps,
+                      checkpoint_every=args.checkpoint_every,
+                      checkpoint_dir=args.checkpoint_dir,
+                      resume=resume)
         if i == 0:
             print(_knob_line(res.plan))
         print(f"run {i}: {_summary(res)}")
+        if res.resumed_from:
+            print(f"  resumed at superstep {res.resumed_from}")
+        if res.recovery:
+            for ev in res.recovery:
+                print(f"  recovered: overflow of {list(ev['channels'])} at "
+                      f"superstep {ev['superstep']} -> cap_scales "
+                      f"{ev['cap_scales']}")
     if args.repeat > 1:
         print(f"engine session: {eng.stats()}")
     for name in sorted(res.bytes_by_channel):
@@ -369,6 +395,19 @@ def main(argv=None) -> int:
                        help="re-run through the same Engine session")
     p_run.add_argument("--no-check", dest="check", action="store_false",
                        help="skip the host-oracle verification")
+    p_run.add_argument("--on-overflow", default="raise",
+                       choices=("raise", "escalate"),
+                       help="channel-capacity overflow policy: escalate "
+                            "re-buckets the overflowed caps and replays")
+    p_run.add_argument("--checkpoint-every", type=int, default=None,
+                       help="snapshot the run every K supersteps "
+                            "(chunked mode; needs --checkpoint-dir)")
+    p_run.add_argument("--checkpoint-dir", default=None,
+                       help="directory checkpoints are written into")
+    p_run.add_argument("--resume", default=None,
+                       help="checkpoint file (or directory: newest is "
+                            "taken) to resume from — bit-identical to "
+                            "the uninterrupted run")
     p_run.set_defaults(fn=cmd_run)
 
     p_bench = sub.add_parser("bench", help="bench programs via one Engine")

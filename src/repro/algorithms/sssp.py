@@ -32,6 +32,27 @@ INF = jnp.float32(np.inf)
 VARIANTS = ("basic", "prop")
 
 
+def _check_nonnegative_weights(pg) -> None:
+    """Bellman-Ford with monotone-min halting is only correct on
+    non-negative weights — a negative edge would need re-activation past
+    the halt vote and silently yields wrong distances. Reject it loudly
+    at init time instead (pad entries in the plans are zeros, so any
+    negative entry is a real edge weight)."""
+    ws = []
+    if pg.raw_out is not None and pg.raw_out.w is not None:
+        ws.append(pg.raw_out.w)
+    if pg.prop_out is not None:
+        if pg.prop_out.int_w is not None:
+            ws.append(pg.prop_out.int_w)
+        if pg.prop_out.cut.edge_w is not None:
+            ws.append(pg.prop_out.cut.edge_w)
+    for w in ws:
+        if bool(jnp.any(w < 0)):
+            raise ValueError(
+                f"sssp requires non-negative edge weights; graph "
+                f"{pg.name!r} has min weight {float(jnp.min(w))}")
+
+
 def program(variant: str = "basic", *, source: int = 0,
             max_steps: int = 10_000) -> VertexProgram:
     """SSSP as a VertexProgram. Output: (n,) float32 distances in old-id
@@ -51,6 +72,7 @@ def program(variant: str = "basic", *, source: int = 0,
         add_w = lambda v, w: v + (w[:, None] if v.ndim == 2 else w)
 
         def query_init(pg, src_old):
+            _check_nonnegative_weights(pg)
             dist0, _ = dist0_of(pg, src_old)
             return {"dist": dist0,
                     "info": jnp.zeros((pg.num_workers, 2), jnp.int32)}
@@ -72,6 +94,7 @@ def program(variant: str = "basic", *, source: int = 0,
         )
 
     def query_init(pg, src_old):
+        _check_nonnegative_weights(pg)
         dist0, src_new = dist0_of(pg, src_old)
         return {"dist": dist0, "active": pg.global_ids() == src_new}
 

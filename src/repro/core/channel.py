@@ -66,6 +66,11 @@ class ChannelRegistry:
             n: jnp.zeros(self.shapes[n], self.dtypes[n]) for n in self.names
         }
 
+    def flags(self) -> Dict[str, jax.Array]:
+        """A zeroed per-channel bool dict with the stat leaf shapes — the
+        carry seed for the per-channel overflow latches."""
+        return {n: jnp.zeros(self.shapes[n], bool) for n in self.names}
+
     @classmethod
     def from_stats_structure(cls, nbytes_struct) -> "ChannelRegistry":
         """Build from the (eval_shape'd) per-step bytes-stats dict."""
@@ -110,6 +115,17 @@ class ChannelContext:
     registry: ChannelRegistry = None
     stats_bytes: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
     stats_msgs: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # per-channel overflow latches (bool), same key set as the traffic
+    # stats — the attribution the escalation/quarantine machinery consumes
+    stats_ovf: Dict[str, jax.Array] = dataclasses.field(default_factory=dict)
+    # capacity-scale overrides keyed by full namespaced channel name (or
+    # the "*" wildcard) — the engine's cap-escalation lever. Scales are
+    # applied at trace time by scale_capacity(); 1.0 entries are dropped
+    # by the engine so the default compile stays byte-identical.
+    cap_scales: Dict[str, float] = dataclasses.field(default_factory=dict)
+    # namespace prefix composed by the composition layer's child contexts,
+    # so scale_capacity sees the same full names the registry records
+    name_prefix: str = ""
     # names that actually reached add_traffic (a host-side trace-time
     # record — the runtime uses it to reject declared-but-never-traced
     # channels without a dedicated dry trace)
@@ -128,9 +144,11 @@ class ChannelContext:
             # Seed every registered key so the stats structure is fixed
             # even when a channel is conditionally skipped this step.
             z = jnp.asarray(0, TRAFFIC_DTYPE)
+            f = jnp.asarray(False)
             for n in self.registry.names:
                 self.stats_bytes.setdefault(n, z)
                 self.stats_msgs.setdefault(n, z)
+                self.stats_ovf.setdefault(n, f)
 
     def me(self):
         return jax.lax.axis_index(self.axis)
@@ -156,6 +174,30 @@ class ChannelContext:
         self.stats_msgs[name] = self.stats_msgs.get(name, z) + jnp.asarray(
             nmsgs, TRAFFIC_DTYPE
         )
+
+    def add_overflow(self, name: str, flag):
+        """Latch a channel's overflow flag under its stat key. Called by
+        every routed channel right next to its add_traffic — same name,
+        so the registry key-set validation in add_traffic covers it."""
+        prev = self.stats_ovf.get(name, jnp.asarray(False))
+        self.stats_ovf[name] = jnp.logical_or(prev, jnp.asarray(flag, bool))
+
+    def full_name(self, name: str) -> str:
+        """``name`` qualified by the composition-layer namespace prefix —
+        the key the registry (and the escalation machinery) sees."""
+        return f"{self.name_prefix}/{name}" if self.name_prefix else name
+
+    def scale_capacity(self, name: str, capacity: int) -> int:
+        """Apply the engine's capacity-scale override for this channel
+        (full name beats the "*" wildcard; absent/1.0 leaves the trace
+        unchanged). Scaled caps re-bucket to the next power of two so the
+        escalated executable lands on the pow2 compile-cache grid."""
+        scale = self.cap_scales.get(
+            self.full_name(name), self.cap_scales.get("*", 1.0))
+        if not self.cap_scales or scale == 1.0:
+            return capacity
+        scaled = max(1, int(capacity * scale))
+        return 1 << (scaled - 1).bit_length()
 
     def stats(self) -> Tuple[Dict[str, jax.Array], Dict[str, jax.Array]]:
         return dict(self.stats_bytes), dict(self.stats_msgs)

@@ -73,15 +73,23 @@ def dense_threshold_scope(threshold: Optional[float]):
 # ---------------------------------------------------------------------------
 
 
-def child_context(ctx: ChannelContext) -> ChannelContext:
+def child_context(ctx: ChannelContext, prefix: str = "") -> ChannelContext:
     """An *open* child context (no registry) sharing ctx's topology.
 
     Channels called with the child accumulate stats locally; fold them
     into the parent with :func:`merge_child`. Used wherever a combinator
     needs to rename or mask a component's traffic before it reaches the
     parent's (possibly registered, fixed-key) accounting.
+
+    ``prefix`` (the name the child's stats will be merged under) composes
+    the namespace so cap-scale lookups inside the child resolve the same
+    full channel names the parent registry records; the engine's
+    ``cap_scales`` ride along.
     """
-    return ChannelContext(ctx.axis, ctx.num_workers, ctx.n_loc)
+    sub = ChannelContext(ctx.axis, ctx.num_workers, ctx.n_loc)
+    sub.cap_scales = ctx.cap_scales
+    sub.name_prefix = ctx.full_name(prefix) if prefix else ctx.name_prefix
+    return sub
 
 
 def merge_child(
@@ -102,12 +110,19 @@ def merge_child(
         if sel is not None:
             nb, nm = nb * sel, nm * sel
         ctx.add_traffic(name, nb, nm)
+    for key in child.stats_ovf:
+        name = f"{prefix}/{key}" if prefix else key
+        ovf = child.stats_ovf[key]
+        if sel is not None:
+            # the unselected branch of a density switch must not latch
+            ovf = jnp.logical_and(ovf, sel != 0)
+        ctx.add_overflow(name, ovf)
 
 
 @contextlib.contextmanager
 def scoped(ctx: ChannelContext, prefix: str, select=None):
     """``with scoped(ctx, "sv/jump") as sub:`` — namespaced accounting."""
-    sub = child_context(ctx)
+    sub = child_context(ctx, prefix)
     yield sub
     merge_child(ctx, sub, prefix, select)
 
@@ -323,7 +338,8 @@ def switch_by_density(
     at trace time (scope > env > 0.1) — the planner's entry point.
     """
     use_dense = jnp.asarray(density) >= resolve_dense_threshold(threshold)
-    d_ctx, s_ctx = child_context(ctx), child_context(ctx)
+    d_ctx = child_context(ctx, f"{name}/dense")
+    s_ctx = child_context(ctx, f"{name}/sparse")
     d_out = dense_fn(d_ctx)
     s_out = sparse_fn(s_ctx)
     sel = use_dense.astype(TRAFFIC_DTYPE)

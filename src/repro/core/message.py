@@ -80,11 +80,13 @@ def direct_send(
     wire_width overrides the accounted per-message payload width (used by
     the monolithic-Pregel emulation where every message is padded to the
     program-wide maximum message type)."""
+    capacity = ctx.scale_capacity(name, capacity)
     routed = _route_maybe_union(ctx, dst, valid, payload, capacity)
     remote = routing.remote_count(ctx, routed.sent_count)
     width = id_bytes + (wire_width if wire_width is not None
                         else payload_width(payload))
     ctx.add_traffic(name, remote * width, remote)
+    ctx.add_overflow(name, routed.overflow)
     return _delivery(ctx, routed, capacity)
 
 
@@ -274,6 +276,7 @@ def combined_send(
     Returns (combined (n_loc,[D]), got_any (n_loc,) bool, overflow).
     """
     combiner = cb.get(combiner)
+    capacity = ctx.scale_capacity(name, capacity)
     squeeze = vals.ndim == 1
     v = vals[:, None] if squeeze else vals
     d = v.shape[1]
@@ -290,6 +293,7 @@ def combined_send(
     width = 4 + (wire_width if wire_width is not None
                  else d * jnp.dtype(v.dtype).itemsize)
     ctx.add_traffic(name, remote * width, remote)
+    ctx.add_overflow(name, overflow)
     return (out[:, 0] if squeeze else out), got, overflow
 
 
@@ -306,7 +310,9 @@ def monolithic_send(
     """Pregel-monolithic emulation (Table IV baseline): every message is
     padded to the program-wide maximum message width `pad_width`, and no
     per-channel combiner can be applied."""
+    capacity = ctx.scale_capacity(name, capacity)
     routed = _route_maybe_union(ctx, dst, valid, payload, capacity)
     remote = routing.remote_count(ctx, routed.sent_count)
     ctx.add_traffic(name, remote * (4 + pad_width), remote)
+    ctx.add_overflow(name, routed.overflow)
     return _delivery(ctx, routed, capacity)

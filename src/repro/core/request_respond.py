@@ -161,6 +161,7 @@ def request(
     squeeze = respond_vals.ndim == 1
     rv = respond_vals[:, None] if squeeze else respond_vals
     d = rv.shape[-1]
+    capacity = ctx.scale_capacity(name + "/request", capacity)
 
     if getattr(ctx, "batched", False) and routing.resolve_batch() == "union":
         out, overflow, remote = _request_union(ctx, dst, valid, rv, capacity)
@@ -171,4 +172,5 @@ def request(
     ctx.add_traffic(
         name + "/respond", remote * d * jnp.dtype(rv.dtype).itemsize, remote
     )
+    ctx.add_overflow(name + "/request", overflow)
     return (out[:, 0] if squeeze else out), overflow

@@ -325,6 +325,37 @@ def _build_raw_edges(src_new, dst_new, weights, n_workers, n_loc, align=8) -> Ra
     )
 
 
+def validate_edge_list(g) -> None:
+    """Reject graphs whose edges index outside ``[0, n)`` or whose
+    weights are NaN/inf, with the offending positions in the message."""
+    if g.n < 1:
+        raise ValueError(f"graph must have at least one vertex, got n={g.n}")
+    e = np.asarray(g.edges)
+    if e.size:
+        if e.ndim != 2 or e.shape[1] != 2:
+            raise ValueError(
+                f"edges must be (E, 2) (src, dst), got shape {e.shape}")
+        bad = (e < 0) | (e >= g.n)
+        if bad.any():
+            rows = np.flatnonzero(bad.any(axis=1))[:5]
+            raise ValueError(
+                f"{int(bad.any(axis=1).sum())} edge endpoint(s) outside "
+                f"[0, {g.n}) — first bad edges at rows {rows.tolist()}: "
+                f"{e[rows].tolist()}")
+    if g.weights is not None:
+        w = np.asarray(g.weights)
+        if w.shape[0] != e.shape[0]:
+            raise ValueError(
+                f"weights length {w.shape[0]} != num edges {e.shape[0]}")
+        nonfinite = ~np.isfinite(w)
+        if nonfinite.any():
+            rows = np.flatnonzero(nonfinite)[:5]
+            raise ValueError(
+                f"{int(nonfinite.sum())} non-finite edge weight(s) "
+                f"(NaN/inf) — first at rows {rows.tolist()}: "
+                f"{w[rows].tolist()}")
+
+
 def partition_graph(
     g: EdgeList,
     n_workers: int,
@@ -336,7 +367,13 @@ def partition_graph(
     """Partition + relabel a graph and precompute the requested plans.
 
     build: subset of {"scatter_out", "scatter_in", "prop_out", "prop_in"}.
+
+    Rejects malformed inputs up front — an out-of-range endpoint or a
+    non-finite weight would otherwise corrupt the relabel/scatter plans
+    silently (numpy fancy indexing wraps negatives) and surface steps
+    later as wrong answers, not errors.
     """
+    validate_edge_list(g)
     new_of_old = partition_lib.PARTITIONERS[partitioner](g, n_workers, seed)
     n_loc = _round_up(-(-g.n // n_workers), align)
     src = new_of_old[g.edges[:, 0]]

@@ -34,6 +34,7 @@ their slot caps).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
@@ -42,7 +43,9 @@ import jax.numpy as jnp
 from repro.core import compose, routing
 from repro.graph.pgraph import PartitionedGraph
 from repro.kernels import ops as kops
-from repro.plan import planner as planning
+from repro.plan import features, planner as planning
+from repro.pregel import checkpoint as ckpt_io
+from repro.pregel import errors
 from repro.pregel import runtime
 from repro.pregel import serve as serving
 from repro.pregel.program import VertexProgram
@@ -71,7 +74,11 @@ class Engine:
                  route_impl: Optional[str] = None,
                  route_batch: Optional[str] = None,
                  dense_threshold: Optional[float] = None,
-                 plan: Any = "manual"):
+                 plan: Any = "manual",
+                 on_overflow: str = "raise",
+                 on_nonconverged: Optional[str] = None,
+                 cap_scales: Optional[Dict[str, float]] = None,
+                 max_retries: int = 8):
         if mode is not None and mode not in ("fused", "chunked", "host"):
             raise ValueError(f"unknown execution mode {mode!r}")
         if not (plan in ("manual", "auto")
@@ -79,6 +86,14 @@ class Engine:
             raise ValueError(
                 f"unknown plan {plan!r} (one of ('manual', 'auto') or a "
                 "repro.plan.Plan)")
+        if on_overflow not in ("raise", "escalate"):
+            raise ValueError(
+                f"unknown on_overflow {on_overflow!r} "
+                "(one of ('raise', 'escalate'))")
+        if on_nonconverged not in (None, "warn", "raise"):
+            raise ValueError(
+                f"unknown on_nonconverged {on_nonconverged!r} "
+                "(one of (None, 'warn', 'raise'))")
         self.backend = backend
         self.mesh = mesh
         # which knobs the caller set explicitly — they win over any plan
@@ -112,6 +127,19 @@ class Engine:
         self.compiles = 0
         self.cache_hits = 0
         self.runs = 0
+        # -- resilience policy (repro.pregel.errors) ----------------------
+        # on_overflow="escalate": on ChannelOverflowError, double the
+        # offending channels' capacity scales (pow2 re-bucketed at trace
+        # time) and replay, up to max_retries attempts; every escalation
+        # is recorded on RunResult.recovery, and the final scales are
+        # memoized per planner fingerprint so repeat runs of the same
+        # problem start right-sized.
+        self.on_overflow = on_overflow
+        self.on_nonconverged = on_nonconverged
+        self.max_retries = int(max_retries)
+        self._base_scales = self._norm_scales(cap_scales or {})
+        # learned capacity scales: fingerprint.cache_key() -> scales dict
+        self._learned: Dict[str, Dict[str, float]] = {}
 
     # -- introspection ----------------------------------------------------
 
@@ -166,12 +194,83 @@ class Engine:
             for d in base.decisions)
         return dataclasses.replace(base, decisions=decisions, **over)
 
+    # -- resilience: capacity-scale escalation ----------------------------
+
+    @staticmethod
+    def _norm_scales(scales: Dict[str, float]) -> Dict[str, float]:
+        """Canonical form of a cap_scales dict: per-channel entries equal
+        to the wildcard default are redundant and dropped, so an
+        escalation that lands back on the default capacities keys the
+        SAME cache entry as a plain run (warm executable, no recompile).
+        """
+        base = float(scales.get("*", 1.0))
+        out: Dict[str, float] = {}
+        if base != 1.0:
+            out["*"] = base
+        for k, v in scales.items():
+            if k != "*" and float(v) != base:
+                out[k] = float(v)
+        return out
+
+    def _fingerprint_key(self, prog: VertexProgram, pg: PartitionedGraph,
+                         num_queries: int) -> Optional[str]:
+        try:
+            return features.fingerprint(
+                prog, pg, num_queries=num_queries).cache_key()
+        except Exception:
+            return None
+
+    def _effective_scales(self, prog: VertexProgram, pg: PartitionedGraph,
+                          num_queries: int) -> Dict[str, float]:
+        """Constructor cap_scales merged with any scales a previous
+        escalation learned for this (program, graph shape, Q) problem —
+        a repeat run starts right-sized instead of re-discovering the
+        overflow one retry at a time."""
+        scales = dict(self._base_scales)
+        if self.on_overflow == "escalate":
+            fp = self._fingerprint_key(prog, pg, num_queries)
+            for k, v in self._learned.get(fp, {}).items():
+                if v > scales.get(k, scales.get("*", 1.0)):
+                    scales[k] = v
+        return self._norm_scales(scales)
+
+    def _remember_scales(self, prog: VertexProgram, pg: PartitionedGraph,
+                         num_queries: int,
+                         scales: Dict[str, float]) -> None:
+        fp = self._fingerprint_key(prog, pg, num_queries)
+        if fp is not None:
+            self._learned[fp] = dict(scales)
+
+    def _escalated(self, scales: Dict[str, float],
+                   channels: Sequence[str]) -> Dict[str, float]:
+        """Double the capacity scale of every overflowed channel (the
+        trace re-buckets the scaled capacity to the next power of two).
+        A global latch with no channel attribution escalates the
+        wildcard — every channel grows."""
+        out = dict(scales)
+        for name in (list(channels) or ["*"]):
+            out[name] = out.get(name, out.get("*", 1.0)) * 2.0
+        return self._norm_scales(out)
+
+    def _check_converged(self, prog: VertexProgram,
+                         res: runtime.RunResult) -> None:
+        if self.on_nonconverged is None or res.converged:
+            return
+        msg = (f"program {prog.name!r} did not converge: the max_steps "
+               f"budget ({res.steps} supersteps) ran out before every "
+               "vertex voted to halt")
+        if self.on_nonconverged == "raise":
+            raise errors.NonConvergenceError(
+                msg, superstep=res.steps, result=res)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
     # -- execution --------------------------------------------------------
 
     def _compile_cached(self, prog: VertexProgram, pg: PartitionedGraph,
                         state0, ms: int, co: bool, key_extra: Tuple = (),
                         num_queries: Optional[int] = None,
-                        serve_chunk: Optional[int] = None):
+                        serve_chunk: Optional[int] = None,
+                        cap_scales: Optional[Dict[str, float]] = None):
         """The one cache-lookup path (run, run_batch, and serve share it,
         so a new config knob lands in every key or none): return
         ``(exe, hit, plan)`` and bump the session counters. The resolved
@@ -185,9 +284,11 @@ class Engine:
         """
         plan = self.resolve_plan(prog, pg,
                                  num_queries=(num_queries or 0))
+        scales = cap_scales or {}
         key = (prog, ms, co, plan.key(),
                runtime.graph_signature(pg),
-               runtime.state_signature(state0)) + key_extra
+               runtime.state_signature(state0),
+               tuple(sorted(scales.items()))) + key_extra
         exe = self._cache.get(key)
         hit = exe is not None
         if not hit:
@@ -204,6 +305,7 @@ class Engine:
                 dense_threshold=plan.dense_threshold,
                 num_queries=num_queries,
                 serve=serve_chunk is not None,
+                cap_scales=scales,
             )
             self._cache[key] = exe
             self.compiles += 1
@@ -226,20 +328,84 @@ class Engine:
 
     def run(self, prog: VertexProgram, pg: PartitionedGraph, *,
             max_steps: Optional[int] = None,
-            check_overflow: Optional[bool] = None) -> runtime.RunResult:
+            check_overflow: Optional[bool] = None,
+            checkpoint_every: Optional[int] = None,
+            checkpoint_dir: Optional[str] = None,
+            resume: Any = None) -> runtime.RunResult:
         """Run ``prog`` on ``pg``; compile only on a cache miss.
 
         Returns the runtime's ``RunResult`` with ``output`` set to
         ``prog.extract(pg, state)`` and the engine/cache metadata filled
         in. ``compile_time_s`` is 0 on cache hits — the compile was paid
         by an earlier run.
+
+        ``checkpoint_every=K`` snapshots the chunked carry into
+        ``checkpoint_dir`` at the first dispatch boundary at or past
+        every K supersteps (chunked mode only — see
+        ``repro.pregel.checkpoint``). ``resume`` takes a checkpoint path
+        or :class:`~repro.pregel.checkpoint.Checkpoint` and continues
+        from that boundary, bit-identical to the uninterrupted run.
+
+        Under ``Engine(on_overflow="escalate")`` a channel-capacity
+        overflow does not kill the run: the offending channels' caps are
+        re-bucketed to the next power of two and the run replays, up to
+        ``max_retries`` attempts. Escalations are reported on
+        ``RunResult.recovery`` and remembered per (program, graph shape)
+        so the next run starts right-sized.
         """
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
         state0 = prog.init(pg)
-        exe, hit, plan = self._compile_cached(prog, pg, state0, ms, co)
-        res = self._stamp(exe.execute(pg, state0), prog, exe, hit, plan)
+
+        resume_carry = None
+        if resume is not None:
+            ckpt = (resume if isinstance(resume, ckpt_io.Checkpoint)
+                    else ckpt_io.load(resume))
+            ckpt.validate(prog.name, pg, ms)
+            resume_carry = ckpt.carry()
+        checkpoint_cb = None
+        if checkpoint_every is not None:
+            if checkpoint_dir is None:
+                raise ValueError(
+                    "checkpoint_every needs checkpoint_dir to write into")
+
+            def checkpoint_cb(snap):
+                ckpt_io.save(
+                    ckpt_io.Checkpoint(
+                        program=prog.name, graph=ckpt_io.graph_hash(pg),
+                        max_steps=ms, **snap),
+                    checkpoint_dir)
+
+        scales = self._effective_scales(prog, pg, 0)
+        recovery: List[Dict[str, Any]] = []
+        attempt = 0
+        while True:
+            exe, hit, plan = self._compile_cached(
+                prog, pg, state0, ms, co, cap_scales=scales)
+            try:
+                raw = exe.execute(pg, state0,
+                                  checkpoint_every=checkpoint_every,
+                                  checkpoint_cb=checkpoint_cb,
+                                  resume=resume_carry)
+                break
+            except errors.ChannelOverflowError as err:
+                if self.on_overflow != "escalate" \
+                        or attempt >= self.max_retries:
+                    if recovery and err.result is not None:
+                        err.result.recovery = recovery
+                    raise
+                scales = self._escalated(scales, err.channels)
+                recovery.append({
+                    "attempt": attempt, "superstep": err.superstep,
+                    "channels": tuple(err.channels),
+                    "cap_scales": dict(scales)})
+                attempt += 1
+        res = self._stamp(raw, prog, exe, hit, plan)
+        if recovery:
+            res.recovery = recovery
+            self._remember_scales(prog, pg, 0, scales)
         res.output = prog.extract(pg, res.state)
+        self._check_converged(prog, res)
         return res
 
     def run_many(self, prog: VertexProgram,
@@ -288,26 +454,51 @@ class Engine:
 
         ms = prog.max_steps if max_steps is None else max_steps
         co = prog.check_overflow if check_overflow is None else check_overflow
-        exe, hit, plan = self._compile_cached(prog, pg, state0, ms, co,
-                                              key_extra=("batch", cap),
-                                              num_queries=cap)
+        scales = self._effective_scales(prog, pg, cap)
+        recovery: List[Dict[str, Any]] = []
+        attempt = 0
+        while True:
+            exe, hit, plan = self._compile_cached(
+                prog, pg, state0, ms, co, key_extra=("batch", cap),
+                num_queries=cap, cap_scales=scales)
+            try:
+                raw = exe.execute(pg, state0, num_real_queries=q)
+                break
+            except errors.ChannelOverflowError as err:
+                if self.on_overflow != "escalate" \
+                        or attempt >= self.max_retries:
+                    if recovery and err.result is not None:
+                        err.result.recovery = recovery
+                    raise
+                scales = self._escalated(scales, err.channels)
+                recovery.append({
+                    "attempt": attempt, "superstep": err.superstep,
+                    "channels": tuple(err.channels),
+                    "qids": tuple(err.qids),
+                    "cap_scales": dict(scales)})
+                attempt += 1
         # the executor slices every per-query view/total/error to the Q
         # real lanes; only the raw carried state keeps the padded width
-        res = self._stamp(exe.execute(pg, state0, num_real_queries=q),
-                          prog, exe, hit, plan)
+        res = self._stamp(raw, prog, exe, hit, plan)
+        if recovery:
+            res.recovery = recovery
+            self._remember_scales(prog, pg, cap, scales)
         res.outputs = [
             prog.extract(pg, jax.tree_util.tree_map(
                 lambda leaf, _qi=qi: leaf[:, _qi], res.state))
             for qi in range(q)
         ]
         res.output = res.outputs
+        self._check_converged(prog, res)
         return res
 
     def serve(self, prog: VertexProgram, pg: PartitionedGraph,
               requests, *, num_lanes: int = 8,
               chunk_size: Optional[int] = None,
               max_steps: Optional[int] = None,
-              check_overflow: Optional[bool] = None
+              check_overflow: Optional[bool] = None,
+              faults: Optional[Sequence] = None,
+              on_fault: str = "quarantine"
               ) -> serving.ServeResult:
         """Continuous-batching query service: serve a stream of queries
         through ``num_lanes`` always-on lanes, admitting from the queue
@@ -330,7 +521,23 @@ class Engine:
         run's. Returns a :class:`~repro.pregel.serve.ServeResult` with
         per-query :class:`~repro.pregel.serve.QueryRecord` entries
         (qid order) and session aggregates.
+
+        A lane that hits a channel-capacity overflow is **quarantined**
+        by default (``on_fault="quarantine"``): its query is harvested
+        with ``status="overflow"`` and no output, the lane is recycled,
+        and every other query completes bit-identical to its solo run.
+        ``on_fault="raise"`` keeps the legacy behaviour and raises
+        :class:`~repro.pregel.errors.ChannelOverflowError` with the
+        failed qids. ``faults`` takes deterministic
+        :class:`~repro.pregel.serve.FaultSpec` injections (force an
+        overflow or a step-budget exhaustion on a chosen qid at a chosen
+        per-query step) for resilience drills — injected failures are
+        flagged ``injected=True`` on their records.
         """
+        if on_fault not in ("quarantine", "raise"):
+            raise ValueError(
+                f"unknown on_fault {on_fault!r} "
+                "(one of ('quarantine', 'raise'))")
         if prog.query_init is None:
             raise ValueError(
                 f"program {prog.name!r} declares no query axis "
@@ -361,7 +568,8 @@ class Engine:
             key_extra=("serve", num_lanes, chunk),
             num_queries=num_lanes, serve_chunk=chunk)
         res = serving.serve_loop(exe, prog, pg, state0, queue, num_lanes,
-                                 chunk, ms, co)
+                                 chunk, ms, co, faults=faults,
+                                 on_fault=on_fault)
         res.program = prog.name
         res.route_batch = exe.route_batch
         res.plan = plan

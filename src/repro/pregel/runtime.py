@@ -70,6 +70,7 @@ from repro.core import routing
 from repro.core.channel import ChannelContext, ChannelRegistry, key_under
 from repro.graph.pgraph import PartitionedGraph
 from repro.kernels import ops as kops
+from repro.pregel import errors
 
 AXIS = "workers"
 
@@ -130,6 +131,18 @@ class RunResult:
     pad_steps: int = 0
     pad_bytes: int = 0
     pad_msgs: int = 0
+    # Resilience layer (repro.pregel.errors / Engine on_overflow):
+    # converged distinguishes a unanimous halt vote from max_steps
+    # exhaustion (for batched runs: every real lane voted halt);
+    # overflow_by_channel is the per-channel overflow attribution (name ->
+    # bool, or name -> (Q,) bool for batched runs); recovery is the
+    # engine's escalation decision log (list of dicts, None when the run
+    # needed no recovery); resumed_from is the checkpointed superstep a
+    # chunked run was resumed at (0 = ran from scratch).
+    converged: bool = False
+    overflow_by_channel: Optional[Dict[str, Any]] = None
+    recovery: Any = None
+    resumed_from: int = 0
 
     @property
     def total_bytes(self) -> int:
@@ -263,9 +276,10 @@ class CompiledSupersteps:
         ``chunk_size`` supersteps. Carry: per-lane ``age`` (steps since
         admission — the step index each lane's step function sees),
         ``halted`` (lane voted halt OR lane unoccupied), ``overflow``.
-        Returns ``(state, age, halted, overflow, d_steps, db, dm)`` with
-        ``d_steps`` the per-lane steps advanced this chunk and db/dm the
-        per-step stat stream. The host (``repro.pregel.serve``) harvests
+        Returns ``(state, age, halted, overflow, d_steps, db, dm, dovf)``
+        with ``d_steps`` the per-lane steps advanced this chunk, db/dm
+        the per-step stat stream and dovf the per-step per-channel
+        overflow flags (per-lane attribution for quarantine). The host (``repro.pregel.serve``) harvests
         finished lanes and refills them between calls — this method never
         re-traces, one executable serves the whole session."""
         if not self.serve:
@@ -274,19 +288,39 @@ class CompiledSupersteps:
         return self._fn(scrub_graph(graph), state, age, halted, overflow)
 
     def execute(self, graph: PartitionedGraph, state0: Any,
-                num_real_queries: Optional[int] = None) -> RunResult:
+                num_real_queries: Optional[int] = None,
+                checkpoint_every: Optional[int] = None,
+                checkpoint_cb: Optional[Callable] = None,
+                resume: Optional[dict] = None) -> RunResult:
         """One run. ``compile_time_s`` on the result is 0 — the caller
         that paid the compile stamps it (run_supersteps / Engine miss).
 
         num_real_queries: for a batched loop, how many leading query
         lanes are real (the rest are bucket padding) — every per-query
-        view, total, and overflow report covers only those lanes."""
+        view, total, and overflow report covers only those lanes.
+
+        checkpoint_every/checkpoint_cb/resume: chunked-mode (unbatched)
+        checkpointing — at the first dispatch boundary at or past every
+        ``checkpoint_every`` supersteps, ``checkpoint_cb`` receives a
+        host-side carry snapshot (step/state/accumulated traffic);
+        ``resume`` restarts the loop from such a snapshot, bit-identical
+        to the uninterrupted run (see ``repro.pregel.checkpoint``)."""
         # the executable was lowered against the scrubbed treedef, so any
         # same-signature graph replays (name/new_of_old identity dropped)
         graph = scrub_graph(graph)
         if self.serve:
             raise ValueError("serving executables are driven chunk by "
                              "chunk (serve_chunk / Engine.serve)")
+        wants_ckpt = (checkpoint_every is not None or checkpoint_cb is not None
+                      or resume is not None)
+        if wants_ckpt and (self.mode != "chunked"
+                           or self.num_queries is not None):
+            raise ValueError(
+                "checkpoint/resume needs the unbatched chunked substrate — "
+                f"this executable is mode={self.mode!r}, num_queries="
+                f"{self.num_queries}. Compile with mode='chunked' "
+                "(Engine(mode='chunked')) to checkpoint at dispatch "
+                "boundaries.")
         if self.num_queries is not None:
             res = _exec_batched(self._fn, graph, state0, self.mode,
                                 self.max_steps, self.check_overflow,
@@ -299,7 +333,9 @@ class CompiledSupersteps:
             res = _exec_fused(self._fn, graph, state0, self.check_overflow)
         else:
             res = _exec_chunked(self._fn, graph, state0, self.max_steps,
-                                self.check_overflow)
+                                self.check_overflow,
+                                checkpoint_every=checkpoint_every,
+                                checkpoint_cb=checkpoint_cb, resume=resume)
         res.use_kernel = self.use_kernel
         res.route_impl = self.route_impl
         res.route_batch = self.route_batch if self.num_queries else ""
@@ -324,6 +360,7 @@ def compile_supersteps(
     dense_threshold: Optional[float] = None,
     num_queries: Optional[int] = None,
     serve: bool = False,
+    cap_scales: Optional[Dict[str, float]] = None,
 ) -> CompiledSupersteps:
     """Compile `step_fn(ctx, graph_shard, state_shard, step)` for a graph
     shape, without running it. See :func:`run_supersteps` for semantics.
@@ -377,10 +414,12 @@ def compile_supersteps(
             # the per-lane scalars routed channels use to share one
             # union-frontier route pass across lanes (route_batch="union")
             if qinfo is None:
-                ctx = ChannelContext(axis, W, n_loc, registry=registry)
+                ctx = ChannelContext(axis, W, n_loc, registry=registry,
+                                     cap_scales=cap_scales or {})
             else:
                 ctx = ChannelContext(
                     axis, W, n_loc, registry=registry,
+                    cap_scales=cap_scales or {},
                     query_index=qinfo[0], query_live=qinfo[1],
                     num_queries=num_queries)
             out = step_fn(ctx, g_shard, state_shard, step_idx)
@@ -394,6 +433,7 @@ def compile_supersteps(
                 jnp.asarray(overflow, jnp.int32), axis) > 0
             traced_names.update(ctx.touched)  # host-side, at trace time
             nbytes, nmsgs = ctx.stats()
+            novf = dict(ctx.stats_ovf)
             if backend == "shard_map":
                 # vmap surfaces one stat scalar per worker ((W,) leaves,
                 # summed host-side); shard_map's replicated out-spec would
@@ -403,7 +443,10 @@ def compile_supersteps(
                 psum = lambda v: jax.lax.psum(v, axis)
                 nbytes = jax.tree_util.tree_map(psum, nbytes)
                 nmsgs = jax.tree_util.tree_map(psum, nmsgs)
-            return new_state, halt_all, overflow_any, nbytes, nmsgs
+                novf = jax.tree_util.tree_map(
+                    lambda v: jax.lax.psum(
+                        jnp.asarray(v, jnp.int32), axis) > 0, novf)
+            return new_state, halt_all, overflow_any, nbytes, nmsgs, novf
 
         return shard_step
 
@@ -447,7 +490,7 @@ def compile_supersteps(
                 # ``rest`` is the replicated (Q,) liveness vector on
                 # batched compiles, empty otherwise.
                 one = lambda x: x[0]
-                new_state, halt, ovf, nb, nm = shard_step(
+                new_state, halt, ovf, nb, nm, novf = shard_step(
                     jax.tree_util.tree_map(one, g_shard),
                     jax.tree_util.tree_map(one, state_shard),
                     step_idx,
@@ -455,14 +498,14 @@ def compile_supersteps(
                 )
                 new_state = jax.tree_util.tree_map(
                     lambda x: x[None], new_state)
-                return new_state, halt, ovf, nb, nm
+                return new_state, halt, ovf, nb, nm, novf
 
             extra = (P(),) if num_queries is not None else ()
             return _shard_map(
                 device_step,
                 mesh=mesh,
                 in_specs=(P(axis), P(axis), P()) + extra,
-                out_specs=(P(axis), P(), P(), P(), P()),
+                out_specs=(P(axis), P(), P(), P(), P(), P()),
             )
         raise ValueError(backend)
 
@@ -502,7 +545,7 @@ def compile_supersteps(
             if num_queries is not None:
                 probe_args += (jnp.ones((num_queries,), bool),)
             out_struct = jax.eval_shape(probe, *probe_args)
-            _, _, _, bytes_struct, _ = out_struct
+            _, _, _, bytes_struct, _, _ = out_struct
             registry = ChannelRegistry.from_stats_structure(bytes_struct)
 
         mapped = map_shards(make_shard_step(registry))
@@ -633,41 +676,52 @@ def run_supersteps(
 def _exec_host(stepper, graph, state0, max_steps, check_overflow) -> RunResult:
     bytes_acc: Dict[str, int] = {}
     msgs_acc: Dict[str, int] = {}
+    ovf_acc: Dict[str, bool] = {}
     state = state0
     halted = False
     t0 = time.perf_counter()
     step_times = []
     overhead = 0.0
+    overflowed = False
+    wrapped_keys: set = set()
     step = -1  # so max_steps=0 reports zero executed supersteps
     for step in range(max_steps):
         ts = time.perf_counter()
-        state, halt_all, overflow, nbytes, nmsgs = stepper(
+        state, halt_all, overflow, nbytes, nmsgs, novf = stepper(
             graph, state, jnp.asarray(step, jnp.int32)
         )
         t_enq = time.perf_counter()
         jax.block_until_ready(state)
         t_dev = time.perf_counter()
         step_times.append(t_dev - ts)
-        if check_overflow and bool(np.asarray(overflow).reshape(-1)[0]):
-            raise RuntimeError(
-                f"channel capacity overflow at superstep {step} — "
-                "increase the channel capacity in the routing plan"
-            )
         for k, v in nbytes.items():
-            bytes_acc[k] = bytes_acc.get(k, 0) + _host_int(v)
+            d = _host_int(v)
+            if d < 0:
+                wrapped_keys.add(k)
+            bytes_acc[k] = bytes_acc.get(k, 0) + d
         for k, v in nmsgs.items():
-            msgs_acc[k] = msgs_acc.get(k, 0) + _host_int(v)
+            d = _host_int(v)
+            if d < 0:
+                wrapped_keys.add(k)
+            msgs_acc[k] = msgs_acc.get(k, 0) + d
+        for k, v in novf.items():
+            ovf_acc[k] = ovf_acc.get(k, False) or bool(np.asarray(v).any())
         halt_now = bool(np.asarray(halt_all).reshape(-1)[0])
         # dispatch enqueue plus readback/bookkeeping time: the host cost
         # of driving one step (the stepper is AOT-compiled, so step 0 is
         # an ordinary dispatch)
         overhead += t_enq - ts
         overhead += time.perf_counter() - t_dev
+        if check_overflow and bool(np.asarray(overflow).reshape(-1)[0]):
+            overflowed = True
+            break
+        if wrapped_keys:
+            break
         if halt_now:
             halted = True
             break
     wall = time.perf_counter() - t0
-    return RunResult(
+    res = RunResult(
         state=state,
         steps=step + 1,
         halted=halted,
@@ -678,7 +732,21 @@ def _exec_host(stepper, graph, state0, max_steps, check_overflow) -> RunResult:
         mode="host",
         dispatches=step + 1,
         host_overhead_s=overhead,
+        converged=halted,
+        overflow_by_channel=ovf_acc,
     )
+    if overflowed:
+        bad = sorted(k for k, v in ovf_acc.items() if v)
+        raise errors.ChannelOverflowError(
+            errors.overflow_message(step, bad),
+            superstep=step, channels=bad, result=res)
+    if wrapped_keys:
+        bad = sorted(wrapped_keys)
+        raise errors.TrafficWrapError(
+            f"int32 traffic counter wrapped in channel(s) {', '.join(bad)} "
+            f"at superstep {step} — per-step traffic exceeds int32 range",
+            superstep=step, channels=bad, result=res)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -688,20 +756,22 @@ def _exec_host(stepper, graph, state0, max_steps, check_overflow) -> RunResult:
 
 def _make_fused_loop(mapped, registry, max_steps, check_overflow):
     zeros = registry.zeros()
+    flags = registry.flags()
 
     def loop(graph, state):
         def cond(carry):
-            _, i, halted, overflow, _, _, _ = carry
+            _, i, halted, overflow, _, _, _, _ = carry
             go = (~halted) & (i < max_steps)
             if check_overflow:
                 go = go & (~overflow)
             return go
 
         def body(carry):
-            state, i, _, overflow, nb, nm, wrapped = carry
-            new_state, halt, ovf, db, dm = mapped(graph, state, i)
+            state, i, _, overflow, nb, nm, ovf_by, wrapped = carry
+            new_state, halt, ovf, db, dm, dovf = mapped(graph, state, i)
             nb2 = jax.tree_util.tree_map(jnp.add, nb, db)
             nm2 = jax.tree_util.tree_map(jnp.add, nm, dm)
+            ovf_by2 = jax.tree_util.tree_map(jnp.logical_or, ovf_by, dovf)
             # per-step deltas are non-negative, so a decreasing accumulator
             # means the int32 counter wrapped — latch it for the host
             for old, new in ((nb, nb2), (nm, nm2)):
@@ -709,10 +779,11 @@ def _make_fused_loop(mapped, registry, max_steps, check_overflow):
                                 jax.tree_util.tree_leaves(new)):
                     wrapped = wrapped | jnp.any(n < o)
             return (new_state, i + 1, _scalar(halt),
-                    overflow | _scalar(ovf), nb2, nm2, wrapped)
+                    overflow | _scalar(ovf), nb2, nm2, ovf_by2, wrapped)
 
         init = (state, jnp.asarray(0, jnp.int32), jnp.zeros((), bool),
-                jnp.zeros((), bool), zeros, zeros, jnp.zeros((), bool))
+                jnp.zeros((), bool), zeros, zeros, flags,
+                jnp.zeros((), bool))
         return jax.lax.while_loop(cond, body, init)
 
     return loop
@@ -720,32 +791,20 @@ def _make_fused_loop(mapped, registry, max_steps, check_overflow):
 
 def _exec_fused(compiled, graph, state0, check_overflow) -> RunResult:
     t0 = time.perf_counter()
-    state, steps, halted, overflow, nb, nm, wrapped = compiled(graph, state0)
+    out = compiled(graph, state0)
+    state, steps, halted, overflow, nb, nm, novf, wrapped = out
     t_enq = time.perf_counter()
     jax.block_until_ready(state)
     t_dev = time.perf_counter()
     wall = t_dev - t0
-    if bool(np.asarray(wrapped)):
-        import warnings
-
-        warnings.warn(
-            "per-channel traffic counters overflowed int32 inside the fused "
-            "loop; bytes/msgs totals are unreliable — use mode='chunked' "
-            "(exact host-side int64 accumulation) for runs this heavy",
-            RuntimeWarning,
-        )
 
     steps = int(np.asarray(steps))
     halted_b = bool(np.asarray(halted))
     bytes_by = {k: _host_int(v) for k, v in nb.items()}
     msgs_by = {k: _host_int(v) for k, v in nm.items()}
+    ovf_by = {k: bool(np.asarray(v).any()) for k, v in novf.items()}
     overhead = (t_enq - t0) + (time.perf_counter() - t_dev)
-    if check_overflow and bool(np.asarray(overflow)):
-        raise RuntimeError(
-            f"channel capacity overflow at superstep {steps - 1} — "
-            "increase the channel capacity in the routing plan"
-        )
-    return RunResult(
+    res = RunResult(
         state=state,
         steps=steps,
         halted=halted_b,
@@ -756,7 +815,23 @@ def _exec_fused(compiled, graph, state0, check_overflow) -> RunResult:
         mode="fused",
         dispatches=1,
         host_overhead_s=overhead,
+        converged=halted_b,
+        overflow_by_channel=ovf_by,
     )
+    if check_overflow and bool(np.asarray(overflow)):
+        bad = sorted(k for k, v in ovf_by.items() if v)
+        raise errors.ChannelOverflowError(
+            errors.overflow_message(steps - 1, bad),
+            superstep=steps - 1, channels=bad, result=res)
+    if bool(np.asarray(wrapped)):
+        # the fused latch is global (accumulator decreased) — no
+        # per-channel attribution on device
+        raise errors.TrafficWrapError(
+            "per-channel traffic counters overflowed int32 inside the fused "
+            "loop; bytes/msgs totals are unreliable — use mode='chunked' "
+            "(exact host-side int64 accumulation) for runs this heavy",
+            superstep=steps - 1, result=res)
+    return res
 
 
 # ---------------------------------------------------------------------------
@@ -768,6 +843,7 @@ def _exec_fused(compiled, graph, state0, check_overflow) -> RunResult:
 def _make_chunk(mapped, registry, max_steps, check_overflow, chunk_size):
     K = max(1, min(chunk_size, max_steps))
     zeros = registry.zeros()
+    flags = registry.flags()
 
     def chunk(graph, state, i0, halted0, overflow0):
         def body(carry, _):
@@ -778,21 +854,22 @@ def _make_chunk(mapped, registry, max_steps, check_overflow, chunk_size):
 
             def do(operand):
                 state, i = operand
-                new_state, halt, ovf, db, dm = mapped(graph, state, i)
+                new_state, halt, ovf, db, dm, dovf = mapped(graph, state, i)
                 return ((new_state, i + 1, _scalar(halt),
-                         overflow | _scalar(ovf)), (db, dm))
+                         overflow | _scalar(ovf)), (db, dm, dovf))
 
             def skip(operand):
                 state, i = operand
                 # skipped steps contribute zero traffic
-                return ((state, i, halted, overflow), (zeros, zeros))
+                return ((state, i, halted, overflow),
+                        (zeros, zeros, flags))
 
             return jax.lax.cond(stop, skip, do, (state, i))
 
-        (state, i, halted, overflow), (db, dm) = jax.lax.scan(
+        (state, i, halted, overflow), (db, dm, dovf) = jax.lax.scan(
             body, (state, i0, halted0, overflow0), None, length=K
         )
-        return state, i, halted, overflow, db, dm
+        return state, i, halted, overflow, db, dm, dovf
 
     return chunk
 
@@ -830,7 +907,7 @@ def _make_batched_step(mapped, q: int):
 
     def bstep(graph, state, i, halted):
         live = ~halted
-        new_state, halt, ovf, db, dm = mapped(graph, state, i, live)
+        new_state, halt, ovf, db, dm, dovf = mapped(graph, state, i, live)
         new_state = jax.tree_util.tree_map(
             lambda n, o: jnp.where(_qmask(live, n), n, o), new_state, state)
         # stat leaves have the query axis last ((W, Q) / (Q,)) — the
@@ -838,14 +915,17 @@ def _make_batched_step(mapped, q: int):
         # (live is the PRE-step vote, matching Q independent runs)
         db = jax.tree_util.tree_map(lambda d: jnp.where(live, d, 0), db)
         dm = jax.tree_util.tree_map(lambda d: jnp.where(live, d, 0), dm)
+        dovf = jax.tree_util.tree_map(
+            lambda d: jnp.where(live, d, False), dovf)
         return (new_state, halted | _qrow(halt, q),
-                _qrow(ovf, q) & live, db, dm)
+                _qrow(ovf, q) & live, db, dm, dovf)
 
     return bstep
 
 
 def _make_batched_fused_loop(mapped, registry, max_steps, check_overflow, q):
     zeros = registry.zeros()
+    flags = registry.flags()
     bstep = _make_batched_step(mapped, q)
 
     # halted0 is an argument (not a constant) so bucket-padding lanes can
@@ -853,28 +933,31 @@ def _make_batched_fused_loop(mapped, registry, max_steps, check_overflow, q):
     # route pass (query_live=False end to end), and is never charged
     def loop(graph, state, halted0):
         def cond(carry):
-            _, i, halted, overflow, _, _, _, _ = carry
+            _, i, halted, overflow, _, _, _, _, _ = carry
             go = jnp.any(~halted) & (i < max_steps)
             if check_overflow:
                 go = go & ~jnp.any(overflow)
             return go
 
         def body(carry):
-            state, i, halted, overflow, steps_q, nb, nm, wrapped = carry
-            new_state, halted2, ovf_q, db, dm = bstep(graph, state, i, halted)
+            state, i, halted, overflow, steps_q, nb, nm, ovf_by, wrapped = (
+                carry)
+            new_state, halted2, ovf_q, db, dm, dovf = bstep(
+                graph, state, i, halted)
             nb2 = jax.tree_util.tree_map(jnp.add, nb, db)
             nm2 = jax.tree_util.tree_map(jnp.add, nm, dm)
+            ovf_by2 = jax.tree_util.tree_map(jnp.logical_or, ovf_by, dovf)
             for old, new in ((nb, nb2), (nm, nm2)):
                 for o, n in zip(jax.tree_util.tree_leaves(old),
                                 jax.tree_util.tree_leaves(new)):
                     wrapped = wrapped | jnp.any(n < o)
             steps_q = steps_q + (~halted).astype(jnp.int32)
             return (new_state, i + 1, halted2, overflow | ovf_q,
-                    steps_q, nb2, nm2, wrapped)
+                    steps_q, nb2, nm2, ovf_by2, wrapped)
 
         qz = jnp.zeros((q,), bool)
         init = (state, jnp.asarray(0, jnp.int32), jnp.asarray(halted0, bool),
-                qz, jnp.zeros((q,), jnp.int32), zeros, zeros,
+                qz, jnp.zeros((q,), jnp.int32), zeros, zeros, flags,
                 jnp.zeros((), bool))
         return jax.lax.while_loop(cond, body, init)
 
@@ -885,6 +968,7 @@ def _make_batched_chunk(mapped, registry, max_steps, check_overflow,
                         chunk_size, q):
     K = max(1, min(chunk_size, max_steps))
     zeros = registry.zeros()
+    flags = registry.flags()
     bstep = _make_batched_step(mapped, q)
 
     def chunk(graph, state, i0, halted0, overflow0):
@@ -896,23 +980,23 @@ def _make_batched_chunk(mapped, registry, max_steps, check_overflow,
 
             def do(operand):
                 state, i, halted, overflow, steps_q = operand
-                new_state, halted2, ovf_q, db, dm = bstep(
+                new_state, halted2, ovf_q, db, dm, dovf = bstep(
                     graph, state, i, halted)
                 steps_q = steps_q + (~halted).astype(jnp.int32)
                 return ((new_state, i + 1, halted2, overflow | ovf_q,
-                         steps_q), (db, dm))
+                         steps_q), (db, dm, dovf))
 
             def skip(operand):
-                return (operand, (zeros, zeros))
+                return (operand, (zeros, zeros, flags))
 
             return jax.lax.cond(stop, skip, do,
                                 (state, i, halted, overflow, steps_q))
 
-        (state, i, halted, overflow, steps_q), (db, dm) = jax.lax.scan(
+        (state, i, halted, overflow, steps_q), (db, dm, dovf) = jax.lax.scan(
             body, (state, i0, halted0, overflow0,
                    jnp.zeros((q,), jnp.int32)),
             None, length=K)
-        return state, i, halted, overflow, steps_q, db, dm
+        return state, i, halted, overflow, steps_q, db, dm, dovf
 
     return chunk
 
@@ -933,6 +1017,7 @@ def _make_serve_chunk(mapped, registry, max_steps, check_overflow,
     lane is dead, so a chunk never does work past its last live step."""
     K = max(1, chunk_size)
     zeros = registry.zeros()
+    flags = registry.flags()
 
     def chunk(graph, state, age0, halted0, overflow0):
         def body(carry, _):
@@ -945,7 +1030,8 @@ def _make_serve_chunk(mapped, registry, max_steps, check_overflow,
             def do(operand):
                 state, age, halted, overflow = operand
                 live = ~(halted | (age >= max_steps))
-                new_state, halt, ovf, db, dm = mapped(graph, state, age, live)
+                new_state, halt, ovf, db, dm, dovf = mapped(
+                    graph, state, age, live)
                 new_state = jax.tree_util.tree_map(
                     lambda n, o: jnp.where(_qmask(live, n), n, o),
                     new_state, state)
@@ -953,41 +1039,43 @@ def _make_serve_chunk(mapped, registry, max_steps, check_overflow,
                     lambda d: jnp.where(live, d, 0), db)
                 dm = jax.tree_util.tree_map(
                     lambda d: jnp.where(live, d, 0), dm)
+                dovf = jax.tree_util.tree_map(
+                    lambda d: jnp.where(live, d, False), dovf)
                 # only a live lane's own vote may halt it: a dead lane's
                 # (discarded) computation must not flip its flags
                 halted2 = halted | (_qrow(halt, q) & live)
                 overflow2 = overflow | (_qrow(ovf, q) & live)
                 return ((new_state, age + live.astype(jnp.int32),
                          halted2, overflow2),
-                        (db, dm, live.astype(jnp.int32)))
+                        (db, dm, dovf, live.astype(jnp.int32)))
 
             def skip(operand):
-                return (operand, (zeros, zeros, jnp.zeros((q,), jnp.int32)))
+                return (operand,
+                        (zeros, zeros, flags, jnp.zeros((q,), jnp.int32)))
 
             return jax.lax.cond(stop, skip, do,
                                 (state, age, halted, overflow))
 
-        (state, age, halted, overflow), (db, dm, lives) = jax.lax.scan(
+        (state, age, halted, overflow), (db, dm, dovf, lives) = jax.lax.scan(
             body,
             (state, jnp.asarray(age0, jnp.int32),
              jnp.asarray(halted0, bool), jnp.asarray(overflow0, bool)),
             None, length=K)
-        return state, age, halted, overflow, lives.sum(axis=0), db, dm
+        return state, age, halted, overflow, lives.sum(axis=0), db, dm, dovf
 
     return chunk
 
 
-def _raise_query_overflow(overflow_q: np.ndarray, steps: int):
-    qs = np.flatnonzero(overflow_q).tolist()
-    raise RuntimeError(
-        f"channel capacity overflow at superstep {steps - 1} for "
-        f"queries {qs} — increase the channel capacity in the routing plan"
-    )
+def _host_q_flag(v, q: int) -> np.ndarray:
+    """Overflow flag leaf with trailing query axis -> (Q,) bool (ORs any
+    leading worker/chunk axes)."""
+    return np.asarray(v).astype(bool).reshape((-1, q)).any(axis=0)
 
 
 def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
                     steps_q, q_real, mode, dispatches, wall, step_times,
-                    overhead, check_overflow) -> RunResult:
+                    overhead, check_overflow, ovf_by=None,
+                    wrapped=False) -> RunResult:
     # report only the real leading lanes — bucket-padding lanes (which
     # start halted) never surface in views, totals, or errors; their
     # aggregates ride along as the dead-pad audit trail (all zero)
@@ -1000,9 +1088,8 @@ def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
     steps_q = steps_q[:q_real]
     q_bytes = {k: v[:q_real] for k, v in q_bytes.items()}
     q_msgs = {k: v[:q_real] for k, v in q_msgs.items()}
-    if check_overflow and overflow_q.any():
-        _raise_query_overflow(overflow_q, steps)
-    return RunResult(
+    ovf_by = {k: v[:q_real] for k, v in (ovf_by or {}).items()}
+    res = RunResult(
         state=state,
         steps=steps,
         halted=bool(halted_q.all()),
@@ -1022,7 +1109,23 @@ def _batched_result(state, steps, halted_q, overflow_q, q_bytes, q_msgs,
         pad_steps=pad_steps,
         pad_bytes=pad_bytes,
         pad_msgs=pad_msgs,
+        converged=bool(halted_q.all()),
+        overflow_by_channel=ovf_by,
     )
+    if check_overflow and overflow_q.any():
+        qs = np.flatnonzero(overflow_q).tolist()
+        bad = sorted(k for k, v in ovf_by.items() if np.asarray(v).any())
+        raise errors.ChannelOverflowError(
+            errors.overflow_message(steps - 1, bad, qids=qs),
+            superstep=steps - 1, channels=bad, result=res, qids=qs)
+    if wrapped:
+        raise errors.TrafficWrapError(
+            "per-channel traffic counters overflowed int32 inside the "
+            "batched loop; bytes/msgs totals are unreliable — use "
+            "mode='chunked' (exact host-side int64 accumulation) for "
+            "runs this heavy",
+            superstep=steps - 1, result=res)
+    return res
 
 
 def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
@@ -1034,20 +1137,10 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
         t0 = time.perf_counter()
         out = compiled(graph, state0, pad_halted)
         t_enq = time.perf_counter()
-        state, steps, halted, overflow, steps_q, nb, nm, wrapped = out
+        state, steps, halted, overflow, steps_q, nb, nm, novf, wrapped = out
         jax.block_until_ready(state)
         t_dev = time.perf_counter()
         wall = t_dev - t0
-        if bool(np.asarray(wrapped)):
-            import warnings
-
-            warnings.warn(
-                "per-channel traffic counters overflowed int32 inside the "
-                "fused loop; bytes/msgs totals are unreliable — use "
-                "mode='chunked' (exact host-side int64 accumulation) for "
-                "runs this heavy",
-                RuntimeWarning,
-            )
         overhead = (t_enq - t0) + (time.perf_counter() - t_dev)
         return _batched_result(
             state, int(np.asarray(steps)), np.asarray(halted),
@@ -1055,15 +1148,27 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
             {k: _host_q(v, q) for k, v in nb.items()},
             {k: _host_q(v, q) for k, v in nm.items()},
             np.asarray(steps_q).astype(np.int64), q_real, mode, 1, wall,
-            [wall], overhead, check_overflow)
+            [wall], overhead, check_overflow,
+            ovf_by={k: _host_q_flag(v, q) for k, v in novf.items()},
+            wrapped=bool(np.asarray(wrapped)))
 
     q_bytes: Dict[str, np.ndarray] = {}
     q_msgs: Dict[str, np.ndarray] = {}
+    q_ovf: Dict[str, np.ndarray] = {}
+    wrapped = False
 
     def acc(into, delta):
+        nonlocal wrapped
         for k, v in delta.items():
             row = _host_q(v, q)
+            if (row < 0).any():
+                wrapped = True
             into[k] = into.get(k, 0) + row
+
+    def acc_ovf(delta):
+        for k, v in delta.items():
+            row = _host_q_flag(v, q)
+            q_ovf[k] = q_ovf.get(k, False) | row
 
     state = state0
     halted = pad_halted
@@ -1081,7 +1186,7 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
             if not live.any():
                 break
             ts = time.perf_counter()
-            state, halted, ovf_q, db, dm = compiled(
+            state, halted, ovf_q, db, dm, dovf = compiled(
                 graph, state, jnp.asarray(step, jnp.int32), halted)
             t_enq = time.perf_counter()
             jax.block_until_ready(state)
@@ -1092,16 +1197,19 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
             steps_q += live
             acc(q_bytes, db)
             acc(q_msgs, dm)
+            acc_ovf(dovf)
             overflow_acc |= np.asarray(ovf_q)
             overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
             if check_overflow and overflow_acc[:q_real].any():
-                _raise_query_overflow(overflow_acc[:q_real], steps)
+                break
+            if wrapped:
+                break
     else:  # chunked
         i = jnp.asarray(0, jnp.int32)
         overflow = jnp.zeros((q,), bool)
         while True:
             ts = time.perf_counter()
-            state, i, halted, overflow, d_steps, db, dm = compiled(
+            state, i, halted, overflow, d_steps, db, dm, dovf = compiled(
                 graph, state, i, halted, overflow)
             t_enq = time.perf_counter()
             jax.block_until_ready(state)
@@ -1112,10 +1220,13 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
             steps_q += np.asarray(d_steps).astype(np.int64)
             acc(q_bytes, db)
             acc(q_msgs, dm)
+            acc_ovf(dovf)
             overflow_acc |= np.asarray(overflow)
             overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
             if check_overflow and overflow_acc[:q_real].any():
-                _raise_query_overflow(overflow_acc[:q_real], steps)
+                break
+            if wrapped:
+                break
             if bool(np.asarray(halted).all()) or steps >= max_steps:
                 break
 
@@ -1123,24 +1234,41 @@ def _exec_batched(compiled, graph, state0, mode, max_steps, check_overflow,
     return _batched_result(
         state, steps, np.asarray(halted), overflow_acc, q_bytes, q_msgs,
         steps_q, q_real, mode, dispatches, wall, step_times, overhead,
-        check_overflow)
+        check_overflow, ovf_by=q_ovf, wrapped=wrapped)
 
 
-def _exec_chunked(compiled, graph, state0, max_steps,
-                  check_overflow) -> RunResult:
+def _exec_chunked(compiled, graph, state0, max_steps, check_overflow,
+                  checkpoint_every: Optional[int] = None,
+                  checkpoint_cb: Optional[Callable] = None,
+                  resume: Optional[dict] = None) -> RunResult:
     f = jnp.zeros((), bool)
     bytes_acc: Dict[str, int] = {}
     msgs_acc: Dict[str, int] = {}
+    ovf_acc: Dict[str, bool] = {}
     state = state0
     i = jnp.asarray(0, jnp.int32)
     halted, overflow = f, f
+    resumed_from = 0
+    if resume is not None:
+        # restart from a dispatch-boundary snapshot: the scan continues
+        # with the exact carry the uninterrupted run had at this boundary,
+        # so states/steps/traffic replay bit for bit
+        state = jax.tree_util.tree_map(jnp.asarray, resume["state"])
+        i = jnp.asarray(int(resume["step"]), jnp.int32)
+        bytes_acc = dict(resume["bytes_by_channel"])
+        msgs_acc = dict(resume["msgs_by_channel"])
+        ovf_acc = dict(resume.get("overflow_by_channel", {}))
+        resumed_from = int(resume["step"])
+    next_due = (resumed_from + checkpoint_every
+                if checkpoint_every else None)
     chunk_times = []
     dispatches = 0
     overhead = 0.0
+    wrapped_keys: set = set()
     t0 = time.perf_counter()
     while True:
         ts = time.perf_counter()
-        state, i, halted, overflow, db, dm = compiled(
+        state, i, halted, overflow, db, dm, dovf = compiled(
             graph, state, i, halted, overflow
         )
         t_enq = time.perf_counter()
@@ -1148,26 +1276,43 @@ def _exec_chunked(compiled, graph, state0, max_steps,
         t_dev = time.perf_counter()
         chunk_times.append(t_dev - ts)
         dispatches += 1
-        # stream the chunk's per-step stats out (skipped steps are zero)
+        # stream the chunk's per-step stats out (skipped steps are zero);
+        # a negative per-step delta is an in-step int32 wrap
         for k, v in db.items():
+            if (np.asarray(v) < 0).any():
+                wrapped_keys.add(k)
             bytes_acc[k] = bytes_acc.get(k, 0) + _host_int(v)
         for k, v in dm.items():
+            if (np.asarray(v) < 0).any():
+                wrapped_keys.add(k)
             msgs_acc[k] = msgs_acc.get(k, 0) + _host_int(v)
+        for k, v in dovf.items():
+            ovf_acc[k] = ovf_acc.get(k, False) or bool(np.asarray(v).any())
         steps = int(np.asarray(i))
         halt_now = bool(np.asarray(halted))
+        overflowed = check_overflow and bool(np.asarray(overflow))
         overhead += (t_enq - ts) + (time.perf_counter() - t_dev)
-        if check_overflow and bool(np.asarray(overflow)):
-            raise RuntimeError(
-                f"channel capacity overflow at superstep {steps - 1} — "
-                "increase the channel capacity in the routing plan"
-            )
+        if overflowed or wrapped_keys:
+            break
         if halt_now or steps >= max_steps:
             break
+        if (checkpoint_cb is not None and next_due is not None
+                and steps >= next_due):
+            checkpoint_cb({
+                "step": steps,
+                "state": jax.tree_util.tree_map(np.asarray, state),
+                "bytes_by_channel": dict(bytes_acc),
+                "msgs_by_channel": dict(msgs_acc),
+                "overflow_by_channel": dict(ovf_acc),
+                "dispatches": dispatches,
+            })
+            next_due = steps + checkpoint_every
     wall = time.perf_counter() - t0
-    return RunResult(
+    halted_b = bool(np.asarray(halted))
+    res = RunResult(
         state=state,
         steps=steps,
-        halted=bool(np.asarray(halted)),
+        halted=halted_b,
         bytes_by_channel=bytes_acc,
         msgs_by_channel=msgs_acc,
         wall_time_s=wall,
@@ -1176,4 +1321,19 @@ def _exec_chunked(compiled, graph, state0, max_steps,
         dispatches=dispatches,
         compile_time_s=0.0,
         host_overhead_s=overhead,
+        converged=halted_b,
+        overflow_by_channel=ovf_acc,
+        resumed_from=resumed_from,
     )
+    if overflowed:
+        bad = sorted(k for k, v in ovf_acc.items() if v)
+        raise errors.ChannelOverflowError(
+            errors.overflow_message(steps - 1, bad),
+            superstep=steps - 1, channels=bad, result=res)
+    if wrapped_keys:
+        bad = sorted(wrapped_keys)
+        raise errors.TrafficWrapError(
+            f"int32 traffic counter wrapped in channel(s) {', '.join(bad)} "
+            f"by superstep {steps - 1} — per-step traffic exceeds int32 "
+            "range", superstep=steps - 1, channels=bad, result=res)
+    return res

@@ -25,18 +25,31 @@ Time has two axes: the *logical clock* counts supersteps (deterministic
 — latency in supersteps is reproducible run to run) and wall time is
 measured at dispatch boundaries. When every lane is idle and the next
 arrival is in the future the clock fast-forwards instead of spinning.
+
+Failure isolation (PR 9): a lane whose query overflows a channel is
+**quarantined** instead of killing the session — the query is harvested
+with ``status="overflow"`` (no output, the offending channel names on
+``QueryRecord.channels``), the lane is recycled, and every other query
+still matches its solo run bit for bit. :class:`FaultSpec` injects
+deterministic failures (forced overflow / forced step-budget exhaustion
+on a chosen qid at a chosen per-query step) so the isolation contract is
+drillable without crafting a pathological graph; a
+:class:`~repro.distributed.fault_tolerance.StragglerMonitor` watches
+per-dispatch wall times and reports outlier dispatches on the result.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
 import time
-from typing import Any, Dict, Iterable, List, Optional
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.distributed.fault_tolerance import StragglerMonitor
+from repro.pregel import errors
 from repro.pregel import runtime
 
 
@@ -128,6 +141,48 @@ class QueryQueue:
                 e.wall_eligible_s = wall_s
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One deterministic fault injection for a serving session.
+
+    Fires at the first chunk boundary at which query ``qid`` has run at
+    least ``at_step`` supersteps *of its own tenancy* (per-query steps,
+    not the session clock — the same axis a solo run counts).
+
+    kind="overflow": the lane is treated exactly as if a channel
+    reported capacity overflow at that boundary (quarantined or raised
+    per ``on_fault``). kind="exhaust": the lane is force-harvested as if
+    its step budget ran out (partial output extracted, ``halted=False``,
+    ``status="exhausted"``). A fault against a query that halts before
+    ``at_step`` never fires.
+    """
+
+    qid: int
+    at_step: int
+    kind: str = "overflow"
+
+    def __post_init__(self):
+        if self.kind not in ("overflow", "exhaust"):
+            raise ValueError(
+                f"unknown fault kind {self.kind!r} "
+                "(one of ('overflow', 'exhaust'))")
+        if self.at_step < 0:
+            raise ValueError(f"at_step must be >= 0, got {self.at_step}")
+
+
+def as_faults(faults) -> Dict[int, FaultSpec]:
+    """Normalize a faults argument — FaultSpec instances or plain
+    ``(qid, at_step, kind)`` tuples — into a qid-keyed dict (at most one
+    fault per qid; duplicates are rejected, not silently merged)."""
+    out: Dict[int, FaultSpec] = {}
+    for f in (faults or ()):
+        spec = f if isinstance(f, FaultSpec) else FaultSpec(*f)
+        if spec.qid in out:
+            raise ValueError(f"duplicate fault for qid {spec.qid}")
+        out[spec.qid] = spec
+    return out
+
+
 @dataclasses.dataclass
 class QueryRecord:
     """One served query: identity, placement, timing, and the per-tenancy
@@ -148,6 +203,15 @@ class QueryRecord:
     wall_eligible_s: float = 0.0
     wall_admitted_s: float = 0.0
     wall_finished_s: float = 0.0
+    # failure disposition: "ok" (voted halt), "exhausted" (step budget),
+    # "overflow" (channel capacity — quarantined, no output)
+    status: str = "ok"
+    injected: bool = False       # failure came from a FaultSpec drill
+    channels: Tuple[str, ...] = ()   # overflowed channels, if any
+
+    @property
+    def failed(self) -> bool:
+        return self.status == "overflow"
 
     @property
     def latency_steps(self) -> int:
@@ -193,6 +257,10 @@ class ServeResult:
     # (repro.plan.Plan; data-plane knobs only — the serve substrate pins
     # mode/chunk itself)
     plan: Any = None
+    # dispatch indices whose wall time the StragglerMonitor flagged as
+    # outliers (> threshold x rolling median), plus the session median
+    straggler_dispatches: List[int] = dataclasses.field(default_factory=list)
+    dispatch_median_s: float = 0.0
 
     @property
     def outputs(self) -> List[Any]:
@@ -201,6 +269,15 @@ class ServeResult:
     @property
     def num_queries(self) -> int:
         return len(self.records)
+
+    @property
+    def failed_qids(self) -> List[int]:
+        """qids quarantined on channel overflow (real or injected)."""
+        return [r.qid for r in self.records if r.failed]
+
+    @property
+    def num_failed(self) -> int:
+        return len(self.failed_qids)
 
     @property
     def total_bytes(self) -> int:
@@ -243,8 +320,9 @@ def as_queue(requests) -> QueryQueue:
 
 
 def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
-               chunk_size: int, max_steps: int,
-               check_overflow: bool) -> ServeResult:
+               chunk_size: int, max_steps: int, check_overflow: bool,
+               faults: Optional[Sequence] = None,
+               on_fault: str = "quarantine") -> ServeResult:
     """Drive one serving session over a compiled serve executable.
 
     The boundary protocol, in order: (1) admit — pop due arrivals into
@@ -252,13 +330,20 @@ def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
     clearing its age/halt/overflow; (2) if every lane is idle,
     fast-forward the clock to the next arrival (or finish); (3) dispatch
     one chunk; (4) account the chunk's per-lane steps/traffic to each
-    lane's *current* occupant; (5) harvest lanes whose query halted or
-    exhausted its step budget. Unoccupied lanes stay marked halted, so
-    they are dead end to end — frozen state, zero traffic, masked out of
-    the union route pass.
+    lane's *current* occupant; (5) apply due fault injections and
+    quarantine overflowed lanes (or raise, per ``on_fault``);
+    (6) harvest lanes whose query halted or exhausted its step budget.
+    Unoccupied lanes stay marked halted, so they are dead end to end —
+    frozen state, zero traffic, masked out of the union route pass.
+
+    Quarantine never contaminates survivors: lane state slices are
+    independent, a dead lane is masked out of the route pass, and
+    admission rewrites the whole slice — so the refilled lane and every
+    healthy lane stay bit-identical to their solo runs.
     """
     graph = runtime.scrub_graph(pg)
     L = num_lanes
+    fault_by_qid = as_faults(faults)
     state = state0
     age = np.zeros(L, np.int32)
     halted = np.ones(L, bool)          # all lanes start unoccupied
@@ -267,6 +352,8 @@ def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
     records: List[QueryRecord] = []
     sess_bytes: Dict[str, int] = {}
     sess_msgs: Dict[str, int] = {}
+    monitor = StragglerMonitor()
+    stragglers: List[int] = []
     clock = 0
     executed = 0
     dispatches = 0
@@ -305,9 +392,12 @@ def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
             continue
 
         # --- one chunk: up to chunk_size supersteps, all live lanes
-        state, age_j, halted_j, overflow_j, d_steps, db, dm = \
+        t_disp = time.perf_counter()
+        state, age_j, halted_j, overflow_j, d_steps, db, dm, dovf = \
             exe.serve_chunk(graph, state, age, halted, overflow)
         jax.block_until_ready(state)
+        if monitor.record(dispatches, time.perf_counter() - t_disp):
+            stragglers.append(dispatches)
         dispatches += 1
         # host-side writable copies: admission/harvest mutate them in place
         age = np.array(age_j)
@@ -333,22 +423,61 @@ def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
         for lane in occupied:
             occupant[lane].steps += int(d_steps[lane])
 
-        if check_overflow and any(overflow[l] for l in occupied):
-            bad = [occupant[l].qid for l in occupied if overflow[l]]
-            raise RuntimeError(
-                f"channel capacity overflow in serving session for "
-                f"queries {bad} — increase the channel capacity in the "
-                "routing plan")
+        # --- fault injection: force failures due at this boundary
+        for lane in occupied:
+            rec = occupant[lane]
+            spec = fault_by_qid.get(rec.qid)
+            if (spec is not None and spec.kind == "overflow"
+                    and not rec.injected and rec.steps >= spec.at_step):
+                overflow[lane] = True
+                rec.injected = True
+
+        # --- quarantine (or raise) lanes that overflowed a channel
+        ovf_lanes = [l for l in occupied
+                     if overflow[l]
+                     and (check_overflow or occupant[l].injected)]
+        if ovf_lanes:
+            chan_flags = {name: runtime._host_q_flag(v, L)
+                          for name, v in dovf.items()}
+            if on_fault == "raise":
+                bad = [occupant[l].qid for l in ovf_lanes]
+                chans = sorted(
+                    n for n, row in chan_flags.items()
+                    if any(row[l] for l in ovf_lanes))
+                raise errors.ChannelOverflowError(
+                    errors.overflow_message(clock, chans, qids=bad),
+                    superstep=clock, channels=chans, qids=bad)
+            for lane in ovf_lanes:
+                rec = occupant[lane]
+                rec.status = "overflow"
+                rec.channels = tuple(sorted(
+                    n for n, row in chan_flags.items() if row[lane]))
+                rec.output = None
+                rec.halted = False
+                rec.finished = clock
+                rec.wall_finished_s = now()
+                records.append(rec)
+                occupant[lane] = None
+                halted[lane] = True   # dead until refilled (state slice
+                overflow[lane] = False  # is rewritten on admission)
 
         # --- harvest: lanes whose query halted or ran out of budget
+        # (or whose FaultSpec exhausts it early)
         for lane in occupied:
-            if not (halted[lane] or age[lane] >= max_steps):
-                continue
             rec = occupant[lane]
+            if rec is None:
+                continue              # quarantined above
+            spec = fault_by_qid.get(rec.qid)
+            force = (spec is not None and spec.kind == "exhaust"
+                     and rec.steps >= spec.at_step)
+            if not (halted[lane] or age[lane] >= max_steps or force):
+                continue
             lane_state = jax.tree_util.tree_map(
                 lambda leaf, _l=lane: leaf[:, _l], state)
             rec.output = prog.extract(pg, lane_state)
             rec.halted = bool(halted[lane])
+            rec.status = "ok" if rec.halted else "exhausted"
+            rec.injected = rec.injected or (force and not rec.halted)
             rec.finished = clock
             rec.wall_finished_s = now()
             records.append(rec)
@@ -368,4 +497,6 @@ def serve_loop(exe, prog, pg, state0, queue: QueryQueue, num_lanes: int,
         wall_time_s=time.perf_counter() - t0,
         bytes_by_channel=sess_bytes,
         msgs_by_channel=sess_msgs,
+        straggler_dispatches=stragglers,
+        dispatch_median_s=monitor.median,
     )
