@@ -51,6 +51,10 @@ EXPECTED = {
         "scale", "workers", "seed", "escalation", "checkpoint",
         "quarantine", "headline",
     },
+    "BENCH_weak_scaling.json": {
+        "scale", "devices", "repeats", "seed", "program", "dataset",
+        "rows", "headline",
+    },
 }
 for _keys in EXPECTED.values():
     _keys.add("provenance")
@@ -91,6 +95,12 @@ NESTED = {
         "headline": {"escalate_bit_identical", "resume_bit_identical",
                      "quarantine_isolated", "escalation_retries",
                      "checkpoint_overhead_frac", "target", "meets_target"},
+    },
+    "BENCH_weak_scaling.json": {
+        "headline": {"program", "dataset", "devices_max",
+                     "per_device_ratio", "random_ratio",
+                     "msg_ratio_random", "target", "meets_target",
+                     "bit_identical"},
     },
 }
 for _name in EXPECTED:

@@ -73,4 +73,19 @@ python -m repro run wcc:basic --scale 9 --chunk-size 2 \
 python -m benchmarks.resilience --scale 9 \
   --out "$smoke_dir/BENCH_resilience.json"
 python -m benchmarks.check_schema "$smoke_dir/BENCH_resilience.json"
+
+echo "== weak scaling: degree-aware partitioning + hub mirroring (smoke) =="
+# forced 1/2/4-device CPU meshes are spawned inside the benchmark's
+# subprocesses (XLA flags must precede jax init); smoke checks the
+# machinery + bit-identity, not the throughput target (tiny scales are
+# overhead-dominated)
+python -m benchmarks.weak_scaling --scale 10 --devices 1,2,4 --repeats 1 \
+  --out "$smoke_dir/BENCH_weak_scaling.json" || true
+python -m benchmarks.check_schema "$smoke_dir/BENCH_weak_scaling.json"
+python - "$smoke_dir/BENCH_weak_scaling.json" <<'EOF'
+import json, sys
+h = json.load(open(sys.argv[1]))["headline"]
+assert h["bit_identical"], "mirrored weak-scaling run not bit-identical"
+print(f"weak-scaling smoke ok (bit_identical, ratio {h['per_device_ratio']})")
+EOF
 echo "tier1: all stages pass"

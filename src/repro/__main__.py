@@ -49,6 +49,7 @@ import time
 
 from repro.algorithms import (ALGORITHMS, BATCHED, DEFAULT_VARIANT, REGISTRY,
                               resolve)
+from repro.graph import partition as partition_lib
 from repro.graph import pgraph
 from repro.pregel.engine import Engine
 
@@ -75,8 +76,11 @@ def _knob_line(plan) -> str:
 
 def _prepare(spec, args):
     graph = spec.make_graph(args.scale, args.seed)
+    thr = getattr(args, "mirror_threshold", None)
+    if thr is not None and thr != "auto":
+        thr = int(thr)
     pg = pgraph.partition_graph(graph, args.workers, args.partitioner,
-                                build=spec.build)
+                                build=spec.build, mirror_threshold=thr)
     # --max-steps is a per-run Engine override (prop/pagerank factories
     # manage their own budgets), not a factory knob
     inputs = spec.inputs(graph, args.seed)
@@ -371,7 +375,11 @@ def main(argv=None) -> int:
                        help="graph scale (n = 2^scale)")
         p.add_argument("--workers", type=int, default=8)
         p.add_argument("--partitioner", default="random",
-                       choices=("block", "random", "bfs"))
+                       choices=sorted(partition_lib.PARTITIONERS))
+        p.add_argument("--mirror-threshold", default=None,
+                       help="hub-mirroring degree threshold for the "
+                            "scatter/prop plans: an int, 'auto', or unset "
+                            "(off). See docs/scaling.md.")
         p.add_argument("--chunk-size", type=int, default=None,
                        help="chunked-mode dispatch width (default 64; "
                             "None lets --plan auto choose)")

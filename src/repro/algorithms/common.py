@@ -114,13 +114,14 @@ def cm_propagate(
     def body(carry):
         lab, active, _, it, nb, nm = carry
         tmp = ChannelContext(ctx.axis, w, n_loc)
+        tmp.route_cap = ctx.route_cap
         valid = raw_edges.mask & active[raw_edges.src_local]
         vals = lab[raw_edges.src_local]
         if raw_edges.w is not None:
             pass  # weighted variants pass transform via update
         inc, got, _ = msg.combined_send(
-            tmp, raw_edges.dst_global, valid, vals, comb, capacity=n_loc,
-            name="x",
+            tmp, raw_edges.dst_global, valid, vals, comb,
+            capacity=tmp.edge_capacity(n_loc), name="x",
         )
         new = upd(lab, inc, got)
         new_active = jnp.any(

@@ -65,7 +65,7 @@ def program(variant: str = "scatter", *, iters: int = 30,
                 raw.mask,
                 contrib[raw.src_local],
                 "sum",
-                capacity=ctx.n_loc,
+                capacity=ctx.edge_capacity(ctx.n_loc),
             )
         sink = agg.aggregate(
             ctx, jnp.where((gs.deg_out == 0) & gs.v_mask, pr, 0.0), "sum"

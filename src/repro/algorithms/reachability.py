@@ -55,7 +55,8 @@ def program(variant: str = "basic", *, source: int = 0,
         # UNREACHED+1 would wrap; invalid lanes are masked, so clip first
         send_val = jnp.minimum(hop[raw.src_local], UNREACHED - 1) + 1
         inc, got, overflow = msg.combined_send(
-            ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
+            ctx, raw.dst_global, valid, send_val, "min",
+            capacity=ctx.edge_capacity(ctx.n_loc),
         )
         new = jnp.where(gs.v_mask, jnp.minimum(hop, inc), hop)
         new_active = new < hop

@@ -107,7 +107,8 @@ def program(variant: str = "basic", *, source: int = 0,
         send_val = dist[raw.src_local] + raw.w
         valid = raw.mask & active[raw.src_local]
         inc, got, overflow = msg.combined_send(
-            ctx, raw.dst_global, valid, send_val, "min", capacity=ctx.n_loc
+            ctx, raw.dst_global, valid, send_val, "min",
+            capacity=ctx.edge_capacity(ctx.n_loc),
         )
         new = jnp.where(gs.v_mask, jnp.minimum(dist, inc), dist)
         new_active = new < dist

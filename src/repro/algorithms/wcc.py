@@ -82,7 +82,7 @@ def program(variant: str = "prop", *, max_steps: int = 10_000,
         if variant == "basic":
             inc, _, ovf = msg.combined_send(
                 ctx, raw.dst_global, valid, lab[raw.src_local], "min",
-                capacity=ctx.n_loc,
+                capacity=ctx.edge_capacity(ctx.n_loc),
             )
             return inc, ovf
 
@@ -98,7 +98,7 @@ def program(variant: str = "prop", *, max_steps: int = 10_000,
             dense_vals=jnp.where(gs.v_mask, lab, INF32),
             dst=raw.dst_global, valid=valid,
             sparse_vals=lab[raw.src_local],
-            combiner="min", capacity=ctx.n_loc,
+            combiner="min", capacity=ctx.edge_capacity(ctx.n_loc),
         )
         return inc, ovf
 

@@ -138,6 +138,10 @@ class ChannelContext:
     query_index: jax.Array = None   # () int32 lane id — batched over Q
     query_live: jax.Array = None    # () bool — lane's pre-step halt vote
     num_queries: int = None
+    # partition-derived per-peer capacity bound for edge-derived routed
+    # sends (PartitionedGraph.route_cap, threaded in by the runtime;
+    # 0 = unknown). See edge_capacity().
+    route_cap: int = 0
 
     def __post_init__(self):
         if self.registry is not None:
@@ -181,6 +185,23 @@ class ChannelContext:
         so the registry key-set validation in add_traffic covers it."""
         prev = self.stats_ovf.get(name, jnp.asarray(False))
         self.stats_ovf[name] = jnp.logical_or(prev, jnp.asarray(flag, bool))
+
+    def edge_capacity(self, default: int) -> int:
+        """Per-peer slot capacity for a routed send whose destinations are
+        **graph edge endpoints** and that dedups before routing
+        (CombinedMessage / RequestRespond over edge frontiers): the
+        partition layer's ``route_cap`` — the max over (sender, owner)
+        pairs of unique edge destinations — provably bounds any such
+        frontier's per-owner occupancy, so the per-owner ``all_to_all``
+        buffers shrink from the full-width ``default`` (= n_loc) to the
+        partition-derived bound with zero overflow risk. Do NOT use it
+        for pointer/state-derived destinations (e.g. pointer jumping)
+        or non-deduping DirectMessage sends — those can exceed it.
+
+        Falls back to ``default`` when no bound was threaded in, and
+        never exceeds it (the bound is pow2-bucketed and may round past
+        n_loc on small graphs)."""
+        return min(self.route_cap, default) if self.route_cap else default
 
     def full_name(self, name: str) -> str:
         """``name`` qualified by the composition-layer namespace prefix —

@@ -88,6 +88,7 @@ def child_context(ctx: ChannelContext, prefix: str = "") -> ChannelContext:
     """
     sub = ChannelContext(ctx.axis, ctx.num_workers, ctx.n_loc)
     sub.cap_scales = ctx.cap_scales
+    sub.route_cap = ctx.route_cap
     sub.name_prefix = ctx.full_name(prefix) if prefix else ctx.name_prefix
     return sub
 

@@ -93,12 +93,39 @@ def propagate(
         plan.cut.pack_slot < w * c, plan.cut.pack_slot // c, w
     )  # (U,) int32, w = padding
 
+    # mirrored cut plans (partition_graph(mirror_threshold=...)): the cut
+    # edge_src table indexes an extended value space — local values
+    # followed by every worker's exported-hub values, refreshed by one
+    # all_gather per exchange (same contract as scatter_combine). Only
+    # hubs whose value changed since the last exchange count as traffic,
+    # matching the channel's changed-only accounting.
+    hub_cap = plan.cut.hub_cap
+    if hub_cap:
+        exported = plan.cut.hub_local < n_loc  # (hub_cap,)
+        hub_safe = jnp.minimum(plan.cut.hub_local, n_loc - 1)
+
+    def cut_edge_vals(lab, prev_hub):
+        base = srcv(lab)
+        changed_h = jnp.asarray(0, TRAFFIC_DTYPE)
+        mine = prev_hub
+        if hub_cap:
+            mine = jnp.where(exported[:, None], base[hub_safe], ident)
+            hubs = jax.lax.all_gather(mine, ctx.axis)  # (W, hub_cap, D)
+            base = jnp.concatenate([base, hubs.reshape(-1, d)], axis=0)
+            changed_h = jnp.sum(
+                jnp.any(mine != prev_hub, axis=-1) & exported
+            ).astype(TRAFFIC_DTYPE)
+        pe = base[plan.cut.edge_src]
+        if edge_transform is not None:
+            pe = edge_transform(pe, plan.cut.edge_w)
+        return pe, mine, changed_h
+
     def outer_body(carry):
-        lab, prev_u, rounds, it_total, nbytes, nmsgs, _ = carry
+        lab, prev_u, prev_hub, rounds, it_total, nbytes, nmsgs, _ = carry
         lab, iters = local_fixpoint(lab)
 
         # cut exchange (scatter-combine over cut edges, changed-only traffic)
-        pe = edge_vals(lab, plan.cut.edge_src, plan.cut.edge_w)
+        pe, new_hub, changed_h = cut_edge_vals(lab, prev_hub)
         u_vals = kops.segment_combine(
             pe, plan.cut.edge_seg, plan.cut.u_cap, combiner,
             use_kernel=False, assume_sorted=True,
@@ -117,22 +144,25 @@ def propagate(
         new = upd(lab, inc)
         changed = jax.lax.psum(jnp.any(new != lab).astype(jnp.int32), ctx.axis) > 0
         width = d * jnp.dtype(dtype).itemsize
+        delta = remote_changed + changed_h * (w - 1)
         return (
-            new, u_vals, rounds + 1, it_total + iters,
-            nbytes + remote_changed * width, nmsgs + remote_changed, changed,
+            new, u_vals, new_hub, rounds + 1, it_total + iters,
+            nbytes + delta * width, nmsgs + delta, changed,
         )
 
     def outer_cond(carry):
-        _, _, rounds, _, _, _, changed = carry
+        _, _, _, rounds, _, _, _, changed = carry
         return changed & (rounds < max_outer)
 
     prev0 = jnp.full((plan.cut.u_cap, d), ident, dtype)
+    prev_hub0 = jnp.full((hub_cap, d), ident, dtype)
     init = (
-        lab0, prev0, jnp.asarray(0, jnp.int32), jnp.asarray(0, jnp.int32),
+        lab0, prev0, prev_hub0, jnp.asarray(0, jnp.int32),
+        jnp.asarray(0, jnp.int32),
         jnp.asarray(0, TRAFFIC_DTYPE), jnp.asarray(0, TRAFFIC_DTYPE),
         jnp.asarray(True),
     )
-    lab, _, rounds, iters, nbytes, nmsgs, _ = jax.lax.while_loop(
+    lab, _, _, rounds, iters, nbytes, nmsgs, _ = jax.lax.while_loop(
         outer_cond, outer_body, init
     )
     ctx.add_traffic(name, nbytes, nmsgs)

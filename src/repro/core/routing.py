@@ -6,7 +6,16 @@ Ownership is by contiguous id range, so a routed exchange only needs
 *owner order*, not full destination order: each message's wire slot is
 ``owner * C + rank`` (rank = stable arrival rank within the owner
 bucket), the packed (W, C, ...) buffer is exchanged with one tiled
-``all_to_all``. Two interchangeable implementations compute the slots:
+``all_to_all``. The buffer is *per-owner*: the bucket router scatters
+each message directly into its destination owner's C-wide tile, and the
+tiled ``all_to_all`` splits those tiles across the mesh axis — no gather
+through replicated memory, and under ``shard_map`` each device ships
+exactly one tile per peer. C is the caller's per-peer capacity: the
+partition layer's ``route_cap`` bound (``ChannelContext.edge_capacity``)
+keeps it near the real per-owner occupancy instead of the full vertex
+width, which is what makes the exchange weak-scale (see
+``docs/scaling.md``). Two interchangeable implementations compute the
+slots:
 
   - ``"bucket"`` (default): one-pass counting sort — per-owner histogram
     + stable rank + scatter. O(M·W) work / O(M) depth with the worker
@@ -47,8 +56,23 @@ from jax.custom_batching import custom_vmap
 from repro.configs import knobs
 from repro.core.channel import TRAFFIC_DTYPE
 from repro.kernels import ops as kops
+from repro.pregel.errors import PlanRangeError
 
 BIG = jnp.iinfo(jnp.int32).max
+
+
+def _check_slot_range(w: int, capacity: int) -> None:
+    """Wire slots are int32 ``owner * C + rank``: at production W x C the
+    id silently wraps into another worker's range. W and C are trace-time
+    python ints, so the bound is enforced before anything is compiled."""
+    if w * capacity > BIG:
+        raise PlanRangeError(
+            f"routed exchange W * capacity = {w} * {capacity} exceeds the "
+            f"int32 wire-slot range ({BIG}); reduce the per-peer capacity "
+            "(e.g. a partition-derived ChannelContext.edge_capacity bound) "
+            "or the worker count.",
+            channels=("route",),
+        )
 
 IMPLS = ("bucket", "sort")
 
@@ -173,6 +197,7 @@ def route(
     """
     W, n_loc, ax = ctx.num_workers, ctx.n_loc, ctx.axis
     c = capacity
+    _check_slot_range(W, c)
     ids = jnp.where(valid, dst.astype(jnp.int32), BIG)
     owner = jnp.clip(ids // n_loc, 0, W - 1)
     key = jnp.where(valid, owner, W).astype(jnp.int32)
@@ -310,6 +335,7 @@ def route_union(
     impl = resolve_impl(impl)
     W, n_loc, ax = ctx.num_workers, ctx.n_loc, ctx.axis
     c = capacity
+    _check_slot_range(W, c)
     leaves, treedef = jax.tree_util.tree_flatten(payload)
 
     def routed_tuple(r):

@@ -52,8 +52,27 @@ def plan_broadcast_combine(
     d = vals.shape[-1]
     ident = combiner.ident_for(vals.dtype)
 
-    # 1. per-edge values (gather by local src; padded edges dropped via seg id)
-    per_edge = vals[plan.edge_src]
+    # 1. per-edge values (gather by local src; padded edges dropped via seg
+    # id). Mirrored plans (partition_graph(mirror_threshold=...)) extend
+    # the gather index space with every worker's exported-hub values:
+    # index n_loc + owner * hub_cap + hub_rank reads the mirror of a
+    # remote hub. The mirror->master refresh is the *static* special case
+    # of the RequestRespond channel — the request ids (each owner's
+    # hub_local table) are precomputed into the plan and the respond phase
+    # is positional, so the round trip collapses to one all_gather of the
+    # (hub_cap, D) hub-value tables per superstep. Mirror traffic is
+    # charged below under this channel's own stat key.
+    mirror_msgs = jnp.zeros((), TRAFFIC_DTYPE)
+    if plan.hub_cap:
+        exported = plan.hub_local < ctx.n_loc  # (hub_cap,) real slots
+        safe = jnp.minimum(plan.hub_local, ctx.n_loc - 1)
+        mine = jnp.where(exported[:, None], vals[safe], ident)
+        hubs = jax.lax.all_gather(mine, ctx.axis)  # (W, hub_cap, D)
+        vals_ext = jnp.concatenate([vals, hubs.reshape(-1, d)], axis=0)
+        mirror_msgs = (jnp.sum(exported) * (w - 1)).astype(TRAFFIC_DTYPE)
+    else:
+        vals_ext = vals
+    per_edge = vals_ext[plan.edge_src]
     if edge_transform is not None:
         per_edge = edge_transform(per_edge, plan.edge_w)
 
@@ -88,6 +107,7 @@ def plan_broadcast_combine(
 
     me = ctx.me()
     remote = (plan.send_count.sum() - plan.send_count[me]).astype(TRAFFIC_DTYPE)
+    remote = remote + mirror_msgs  # hub broadcast crosses (W-1) boundaries
     return compose.PlannedExchange(
         name=name,
         payload={"v": send},

@@ -18,10 +18,27 @@ import numpy as np
 
 from repro.graph import partition as partition_lib
 from repro.graph.generators import EdgeList
+from repro.pregel.errors import PlanRangeError
+
+INT32_MAX = 2**31 - 1
 
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+def _check_int32_extent(what: str, value: int) -> None:
+    """Plan tables and wire slots are int32; any extent past 2**31 - 1
+    would silently wrap into another worker's range and corrupt routes.
+    Validated at plan-build/trace time (extents are pure functions of the
+    static caps) so the failure is structured, not a wrong answer."""
+    if value > INT32_MAX:
+        raise PlanRangeError(
+            f"{what} = {value} exceeds the int32 range ({INT32_MAX}); "
+            "the wire-slot ids (owner * C + rank) and plan tables would "
+            "wrap. Reduce workers x capacity (or shrink the graph/caps).",
+            channels=(what,),
+        )
 
 
 def _bucket_cap(x: int, align: int) -> int:
@@ -79,6 +96,18 @@ class ScatterPlan:
     block_rows: int = dataclasses.field(default=0, metadata=dict(static=True))
     block_edges: int = dataclasses.field(default=0, metadata=dict(static=True))
     max_chunks: int = dataclasses.field(default=0, metadata=dict(static=True))
+    # hub mirroring (partition_graph(mirror_threshold=...)): cut edges
+    # whose source degree exceeds the threshold are *re-homed* to the
+    # destination owner and combined there (mirror-side pre-combine). The
+    # mirror reads the hub's value from an extended gather index
+    # ``n_loc + owner(hub) * hub_cap + hub_rank`` — the per-superstep
+    # mirror->master refresh is a static all_gather of each owner's
+    # exported-hub table (see repro.core.scatter_combine).
+    hub_local: Optional[jax.Array] = None  # (W, hub_cap) i32 owner-local
+    #                                        idx of exported hubs (pad n_loc)
+    hub_cap: int = dataclasses.field(default=0, metadata=dict(static=True))
+    mirrored_edges: int = dataclasses.field(
+        default=0, metadata=dict(static=True))
 
 
 @jax.tree_util.register_dataclass
@@ -124,6 +153,14 @@ class PartitionedGraph:
     directed: bool = dataclasses.field(metadata=dict(static=True))
     name: str = dataclasses.field(metadata=dict(static=True))
     new_of_old: HostArray = dataclasses.field(metadata=dict(static=True))
+    # partition-derived per-peer capacity bound for *edge-derived* routed
+    # sends (max over (home worker, owner) pairs of unique destinations,
+    # both orientations, pow2-bucketed; 0 = unknown). Deduping routed
+    # channels can size their per-owner all_to_all buffers with this
+    # instead of the full-width n_loc — see ChannelContext.edge_capacity.
+    # A static field, so it rides the treedef into graph_signature and
+    # every Engine compile-cache key.
+    route_cap: int = dataclasses.field(default=0, metadata=dict(static=True))
 
     @property
     def n_pad(self) -> int:
@@ -157,15 +194,50 @@ def _build_scatter_plan(
     n_workers: int,
     n_loc: int,
     align: int = 8,
+    mirror_threshold: Optional[int] = None,
 ) -> ScatterPlan:
     W = n_workers
+    n_pad = W * n_loc
     owner_src = src_new // n_loc
+    owner_dst = dst_new // n_loc
+
+    # hub mirroring: a cut edge whose source degree (in this plan's
+    # orientation) exceeds the threshold is re-homed to the *destination*
+    # owner — the mirror combines it locally, so the hub's fan-out costs
+    # one broadcast slot per worker instead of one wire entry per unique
+    # remote destination. src_idx below is the (possibly extended) gather
+    # index each edge reads its source value from.
+    home = owner_src
+    src_idx = src_new - owner_src * n_loc
+    hub_cap = 0
+    mirrored = 0
+    hub_local_np = None
+    if mirror_threshold is not None and len(src_new):
+        deg_src = np.bincount(src_new, minlength=n_pad)
+        mir = (deg_src[src_new] > mirror_threshold) & (owner_src != owner_dst)
+        if mir.any():
+            hub_ids = np.unique(src_new[mir])  # sorted => grouped by owner
+            hub_owner = hub_ids // n_loc
+            per_owner = np.bincount(hub_owner, minlength=W)
+            hub_cap = _bucket_cap(int(per_owner.max(initial=0)), align)
+            starts = np.concatenate([[0], np.cumsum(per_owner)])[:-1]
+            rank_of = np.zeros(n_pad, np.int64)
+            rank_of[hub_ids] = np.arange(len(hub_ids)) - starts[hub_owner]
+            hub_local_np = np.full((W, hub_cap), n_loc, np.int32)
+            for w in range(W):
+                mine = hub_ids[hub_owner == w]
+                hub_local_np[w, : len(mine)] = (mine - w * n_loc).astype(
+                    np.int32)
+            home = np.where(mir, owner_dst, owner_src)
+            src_idx = np.where(
+                mir, n_loc + owner_src * hub_cap + rank_of[src_new], src_idx)
+            mirrored = int(mir.sum())
 
     e_caps, u_caps, c_caps = [], [], []
     per_worker = []
     for w in range(W):
-        sel = owner_src == w
-        s, d = src_new[sel], dst_new[sel]
+        sel = home == w
+        s, d = src_idx[sel], dst_new[sel]
         wt = weights[sel] if weights is not None else None
         order = np.lexsort((s, d))
         s, d = s[order], d[order]
@@ -182,6 +254,10 @@ def _build_scatter_plan(
     e_cap = _bucket_cap(max(e_caps), align)
     u_cap = _bucket_cap(max(u_caps), align)
     c = _bucket_cap(int(max(c_caps)), align)
+    _check_int32_extent("scatter_plan/pack_slot (W * slot_cap)", W * c)
+    _check_int32_extent(
+        "scatter_plan/edge_src (n_loc + W * hub_cap)",
+        n_loc + W * hub_cap)
 
     edge_src = np.zeros((W, e_cap), np.int32)
     edge_seg = np.full((W, e_cap), u_cap, np.int32)
@@ -196,7 +272,7 @@ def _build_scatter_plan(
         s, d, wt, u, seg, owners_u, cnt = per_worker[w]
         k, e = len(u), len(s)
         total += e
-        edge_src[w, :e] = (s - w * n_loc).astype(np.int32)
+        edge_src[w, :e] = s.astype(np.int32)
         edge_seg[w, :e] = seg.astype(np.int32)
         if edge_w is not None and e:
             edge_w[w, :e] = wt
@@ -251,11 +327,16 @@ def _build_scatter_plan(
         block_rows=block_rows,
         block_edges=block_edges,
         max_chunks=max_chunks,
+        hub_local=(jnp.asarray(hub_local_np)
+                   if hub_local_np is not None else None),
+        hub_cap=hub_cap,
+        mirrored_edges=mirrored,
     )
 
 
 def _build_prop_plan(
-    src_new, dst_new, weights, n_workers, n_loc, align=8
+    src_new, dst_new, weights, n_workers, n_loc, align=8,
+    mirror_threshold=None,
 ) -> PropPlan:
     W = n_workers
     owner_s = src_new // n_loc
@@ -288,7 +369,7 @@ def _build_prop_plan(
     cut_plan = _build_scatter_plan(
         src_new[cut], dst_new[cut],
         weights[cut] if weights is not None else None,
-        n_workers, n_loc, align,
+        n_workers, n_loc, align, mirror_threshold=mirror_threshold,
     )
     return PropPlan(
         int_src=jnp.asarray(int_src),
@@ -356,6 +437,31 @@ def validate_edge_list(g) -> None:
                 f"{w[rows].tolist()}")
 
 
+def _route_cap_bound(src, dst, n_workers: int, n_loc: int) -> int:
+    """Max over (sending worker, owner) pairs of the number of *unique*
+    destinations — the provable per-peer occupancy bound for any deduping
+    routed send whose destinations are edge endpoints (any frontier's
+    unique dsts per owner is a subset of the full edge set's)."""
+    if not len(src):
+        return 0
+    n_pad = n_workers * n_loc
+    key = (src // n_loc).astype(np.int64) * n_pad + dst
+    u = np.unique(key)
+    pair = (u // n_pad) * n_workers + (u % n_pad) // n_loc
+    return int(np.bincount(pair, minlength=n_workers * n_workers).max())
+
+
+def resolve_mirror_threshold(g: EdgeList, mirror_threshold) -> Optional[int]:
+    """``None`` -> no mirroring; ``"auto"`` -> a degree several times the
+    mean (hubs in the power-law sense); an int passes through."""
+    if mirror_threshold is None:
+        return None
+    if mirror_threshold == "auto":
+        avg = len(g.edges) / max(g.n, 1)
+        return max(64, int(8 * avg))
+    return int(mirror_threshold)
+
+
 def partition_graph(
     g: EdgeList,
     n_workers: int,
@@ -363,10 +469,23 @@ def partition_graph(
     seed: int = 0,
     build=("scatter_out",),
     align: int = 8,
+    mirror_threshold=None,
 ) -> PartitionedGraph:
     """Partition + relabel a graph and precompute the requested plans.
 
     build: subset of {"scatter_out", "scatter_in", "prop_out", "prop_in"}.
+
+    mirror_threshold: enable hub mirroring in the scatter/prop-cut plans —
+    ``None`` (off, plans identical to previous builds), an int degree
+    threshold, or ``"auto"``. A vertex whose degree in a plan's
+    orientation (counted over the edges that plan covers) exceeds the
+    threshold gets a mirror slot on every worker its cut edges touch; the
+    mirror pre-combines locally and the hub's value is refreshed by one
+    static broadcast per superstep. Final vertex outputs are bit-identical
+    to the unmirrored build for order-insensitive combiners (min/max/or —
+    wcc, sv, sssp); floating-point ``sum`` may round differently (the
+    reduction regroups), so leave mirroring off for e.g. pagerank if
+    bit-stability matters.
 
     Rejects malformed inputs up front — an out-of-range endpoint or a
     non-finite weight would otherwise corrupt the relabel/scatter plans
@@ -374,13 +493,19 @@ def partition_graph(
     later as wrong answers, not errors.
     """
     validate_edge_list(g)
+    if partitioner not in partition_lib.PARTITIONERS:
+        raise ValueError(
+            f"unknown partitioner {partitioner!r}; known partitioners: "
+            f"{sorted(partition_lib.PARTITIONERS)}")
     new_of_old = partition_lib.PARTITIONERS[partitioner](g, n_workers, seed)
     n_loc = _round_up(-(-g.n // n_workers), align)
     src = new_of_old[g.edges[:, 0]]
     dst = new_of_old[g.edges[:, 1]]
     w = g.weights
+    thr = resolve_mirror_threshold(g, mirror_threshold)
 
     W = n_workers
+    _check_int32_extent("partition (W * n_loc)", W * n_loc)
     v_mask = np.zeros((W, n_loc), bool)
     flat = v_mask.reshape(-1)
     flat[np.asarray(new_of_old)] = True
@@ -389,17 +514,25 @@ def partition_graph(
 
     plans = {}
     if "scatter_out" in build:
-        plans["scatter_out"] = _build_scatter_plan(src, dst, w, W, n_loc, align)
+        plans["scatter_out"] = _build_scatter_plan(
+            src, dst, w, W, n_loc, align, mirror_threshold=thr)
     if "scatter_in" in build:
-        plans["scatter_in"] = _build_scatter_plan(dst, src, w, W, n_loc, align)
+        plans["scatter_in"] = _build_scatter_plan(
+            dst, src, w, W, n_loc, align, mirror_threshold=thr)
     if "prop_out" in build:
-        plans["prop_out"] = _build_prop_plan(src, dst, w, W, n_loc, align)
+        plans["prop_out"] = _build_prop_plan(
+            src, dst, w, W, n_loc, align, mirror_threshold=thr)
     if "prop_in" in build:
-        plans["prop_in"] = _build_prop_plan(dst, src, w, W, n_loc, align)
+        plans["prop_in"] = _build_prop_plan(
+            dst, src, w, W, n_loc, align, mirror_threshold=thr)
     if "raw_out" in build:
         plans["raw_out"] = _build_raw_edges(src, dst, w, W, n_loc, align)
     if "raw_in" in build:
         plans["raw_in"] = _build_raw_edges(dst, src, w, W, n_loc, align)
+
+    route_cap = max(_route_cap_bound(src, dst, W, n_loc),
+                    _route_cap_bound(dst, src, W, n_loc))
+    route_cap = _bucket_cap(route_cap, align) if route_cap else 0
 
     return PartitionedGraph(
         v_mask=jnp.asarray(v_mask),
@@ -416,4 +549,5 @@ def partition_graph(
         directed=g.directed,
         name=g.name,
         new_of_old=HostArray(new_of_old),
+        route_cap=route_cap,
     )

@@ -57,6 +57,19 @@ class ChannelOverflowError(ExecutionError):
         self.qids: Tuple[int, ...] = tuple(int(q) for q in qids)
 
 
+class PlanRangeError(ExecutionError):
+    """A routing-plan extent would overflow the int32 id/slot space.
+
+    Wire slots are ``owner * C + rank`` and the scatter-plan tables
+    (``pack_slot`` / ``edge_src`` / ``recv_local``) are int32: at
+    production ``W x C`` a slot id past ``2**31 - 1`` silently wraps into
+    another worker's range and corrupts routes instead of failing. The
+    bound is validated at *plan build / trace time* (it is a pure
+    function of the static caps), so the failure is a structured error
+    before any superstep runs — ``superstep`` is always None and
+    ``channels`` names the offending plan or channel where known."""
+
+
 class NonConvergenceError(ExecutionError):
     """The run exhausted ``max_steps`` without a unanimous halt vote.
     Unlike the other two, the attached ``result`` is a *complete* result

@@ -206,8 +206,11 @@ def scrub_graph(graph: PartitionedGraph) -> PartitionedGraph:
     what lets one compiled executable serve both."""
 
     def scatter(plan):
+        # mirrored_edges is an exact count (reporting only); hub_cap and
+        # route_cap are *shape* statics and stay — they change compiled
+        # buffer extents, so they must split the compile cache.
         return plan if plan is None else dataclasses.replace(
-            plan, remote_entries=0, total_edges=0)
+            plan, remote_entries=0, total_edges=0, mirrored_edges=0)
 
     def prop(plan):
         return plan if plan is None else dataclasses.replace(
@@ -415,13 +418,15 @@ def compile_supersteps(
             # union-frontier route pass across lanes (route_batch="union")
             if qinfo is None:
                 ctx = ChannelContext(axis, W, n_loc, registry=registry,
-                                     cap_scales=cap_scales or {})
+                                     cap_scales=cap_scales or {},
+                                     route_cap=graph.route_cap)
             else:
                 ctx = ChannelContext(
                     axis, W, n_loc, registry=registry,
                     cap_scales=cap_scales or {},
                     query_index=qinfo[0], query_live=qinfo[1],
-                    num_queries=num_queries)
+                    num_queries=num_queries,
+                    route_cap=graph.route_cap)
             out = step_fn(ctx, g_shard, state_shard, step_idx)
             if len(out) == 3:
                 new_state, halt, overflow = out
